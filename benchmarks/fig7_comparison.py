@@ -1,0 +1,65 @@
+"""Paper Fig. 7: FPS and FPS/W of OXBNN_5/OXBNN_50 vs ROBIN_EO/PO and
+LIGHTBULB across the four BNNs, plus gmean improvement ratios side by
+side with the paper's published ratios, plus the calibration-knob
+sensitivity sweep (the psum-reduction microarchitecture the prior-work
+papers do not fully specify)."""
+from __future__ import annotations
+
+from repro.photonic import accelerators as acc
+from repro.photonic import simulator as sim
+from repro.photonic import workloads as wl
+
+PAPER_GMEAN_FPS = {      # Fig. 7(a): OXBNN_x vs prior, gmean across BNNs
+    ("OXBNN_50", "ROBIN_EO"): 62.0,
+    ("OXBNN_50", "ROBIN_PO"): 8.0,
+    ("OXBNN_50", "LIGHTBULB"): 7.0,
+    ("OXBNN_5", "ROBIN_EO"): 54.0,
+    ("OXBNN_5", "ROBIN_PO"): 7.0,
+    ("OXBNN_5", "LIGHTBULB"): 16.0,
+}
+PAPER_GMEAN_FPSW = {     # Fig. 7(b)
+    ("OXBNN_5", "ROBIN_EO"): 6.8,
+    ("OXBNN_5", "ROBIN_PO"): 7.6,
+    ("OXBNN_5", "LIGHTBULB"): 2.14,
+    ("OXBNN_50", "ROBIN_EO"): 4.9,
+    ("OXBNN_50", "ROBIN_PO"): 5.5,
+    ("OXBNN_50", "LIGHTBULB"): 1.5,
+}
+
+
+def run() -> list[str]:
+    nets = list(wl.WORKLOADS)
+    rows = ["table,accelerator,network,fps,power_w,fps_per_w"]
+    table = sim.compare(acc.ALL, nets)
+    for name, res in table.items():
+        for net in nets:
+            r = res[net]
+            rows.append(f"fig7,{name},{net},{r.fps:.2f},{r.power_w:.4f},"
+                        f"{r.fps_per_w:.2f}")
+    g_fps = {n: sim.gmean([table[n][w].fps for w in nets]) for n in table}
+    g_fpw = {n: sim.gmean([table[n][w].fps_per_w for w in nets])
+             for n in table}
+    rows.append("table,pair,metric,ours_x,paper_x")
+    for (a, b), px in PAPER_GMEAN_FPS.items():
+        rows.append(f"fig7_ratio,{a}/{b},fps,{g_fps[a] / g_fps[b]:.2f},{px}")
+    for (a, b), px in PAPER_GMEAN_FPSW.items():
+        rows.append(f"fig7_ratio,{a}/{b},fps_per_w,"
+                    f"{g_fpw[a] / g_fpw[b]:.2f},{px}")
+    return rows
+
+
+def run_sensitivity() -> list[str]:
+    """Sweep the unpublished psum-path knobs; shows which assumptions the
+    prior-work gap depends on (EXPERIMENTS.md discussion)."""
+    nets = ["vgg_small", "resnet18"]
+    rows = ["table,psum_width,reduce_units_per_xpe,pair,gmean_fps_ratio"]
+    for width in (4, 8, 32):
+        for ru in (0.25, 1.0):
+            knobs = sim.SimKnobs(psum_write_width=width,
+                                 reduce_units_per_xpe=ru)
+            table = sim.compare(acc.ALL, nets, knobs)
+            g = {n: sim.gmean([table[n][w].fps for w in nets]) for n in table}
+            for prior in ("ROBIN_EO", "ROBIN_PO", "LIGHTBULB"):
+                rows.append(f"fig7_sens,{width},{ru},OXBNN_50/{prior},"
+                            f"{g['OXBNN_50'] / g[prior]:.2f}")
+    return rows

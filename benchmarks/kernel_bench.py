@@ -1,0 +1,60 @@
+"""XNOR-popcount GEMM microbenchmark.
+
+On this CPU harness the Pallas kernel runs in interpret mode (not
+representative), so the timed subject is the XLA packed path — the same
+math the kernel computes — against the dense f32 GEMM baseline, at the
+paper's S=4608 and LM-projection shapes.  Derived column: bit-ops/s and
+the weight-memory compression (32x for 1-bit packing, the quantity that
+drives the paper's energy story).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing, xnor
+from repro.kernels import ops
+
+
+def _time(f, *args, iters=5):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run() -> list[str]:
+    rows = ["table,name,us_per_call,derived"]
+    shapes = [(256, 256, 4608), (512, 2048, 2048), (128, 8192, 1024)]
+    for m, n, s in shapes:
+        k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+        x = jax.random.normal(k1, (m, s), jnp.float32)
+        w = jax.random.normal(k2, (s, n), jnp.float32)
+        ip = packing.pack_pm1(x)
+        wp = jnp.swapaxes(packing.pack_pm1(w, axis=0), 0, 1)
+
+        f_dense = jax.jit(lambda a, b: a @ b)
+        f_xnor = jax.jit(
+            lambda a, b: xnor.xnor_matmul_packed(a, b, s))
+
+        t_dense = _time(f_dense, x, w)
+        t_xnor = _time(f_xnor, ip, wp)
+        bitops = 2 * m * n * s / (t_xnor * 1e-6)
+        rows.append(f"kernel,dense_f32_{m}x{n}x{s},{t_dense:.1f},"
+                    f"flops/s={2 * m * n * s / (t_dense * 1e-6):.3e}")
+        rows.append(f"kernel,xnor_packed_{m}x{n}x{s},{t_xnor:.1f},"
+                    f"bitops/s={bitops:.3e};weight_bytes_ratio=32x")
+    # Pallas kernel (interpret mode): correctness-path timing only
+    m, n, s = 128, 128, 2048
+    ip = packing.pack_bits(jax.random.bernoulli(
+        jax.random.PRNGKey(1), 0.5, (m, s)).astype(jnp.uint32))
+    wp = packing.pack_bits(jax.random.bernoulli(
+        jax.random.PRNGKey(2), 0.5, (n, s)).astype(jnp.uint32))
+    t = _time(lambda a, b: ops.xnor_matmul(a, b, s), ip, wp, iters=2)
+    rows.append(f"kernel,pallas_interpret_{m}x{n}x{s},{t:.1f},"
+                f"mode=interpret(correctness-only-on-CPU)")
+    return rows

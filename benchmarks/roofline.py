@@ -1,0 +1,94 @@
+"""Roofline derivation: per (arch x shape), single-pod 16x16 mesh.
+
+Terms (seconds/step/chip, TPU v5e constants):
+  compute    = analytic executed FLOPs / (256 x 197 TFLOP/s)
+  memory     = analytic HBM bytes    / (256 x 819 GB/s)
+  collective = executed collective bytes per chip (trip-count-weighted
+               HLO analysis from the dry-run) / 50 GB/s link
+
+FLOPs/bytes are analytic (launch/analytic.py) because XLA's cost
+analysis counts scan bodies once — the model is cross-validated against
+unrolled probes in tests/test_analytic.py.  Collective bytes come from
+the compiled module itself.  MODEL_FLOPS = 6*N(_active)*D for train,
+2*N_active*D for inference cells.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro import configs
+from repro.configs.base import SHAPES
+from repro.launch import analytic
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_cells(multi_pod: bool = False):
+    tag = "pod2" if multi_pod else "pod1"
+    cells = {}
+    for path in glob.glob(os.path.join(DRYRUN_DIR, f"*__{tag}.json")):
+        d = json.load(open(path))
+        if d["status"] == "ok":
+            cells[(d["arch"], d["shape"])] = d
+    return cells
+
+
+def roofline_rows(multi_pod: bool = False) -> list[dict]:
+    cells = load_cells(multi_pod)
+    out = []
+    for (arch, shape), d in sorted(cells.items()):
+        cfg = configs.get_config(arch)
+        cell = SHAPES[shape]
+        cm = analytic.cell_model(cfg, cell, microbatches=8)
+        coll = d["collectives"]["total_bytes_executed"]
+        terms = analytic.roofline_terms(cm, coll, d["devices"])
+        out.append({
+            "arch": arch, "shape": shape,
+            "devices": d["devices"],
+            "compute_s": terms["compute_s"],
+            "memory_s": terms["memory_s"],
+            "collective_s": terms["collective_s"],
+            "dominant": terms["dominant"],
+            "model_flops": cm.model_flops,
+            "hlo_flops": cm.flops_total,
+            "useful_frac": terms["useful_flops_fraction"],
+            "roofline_frac": terms["roofline_fraction"],
+            "mem_temp_bytes": d["memory"].get("temp_size_in_bytes", 0),
+            "mem_args_bytes": d["memory"].get("argument_size_in_bytes", 0),
+            "coll_bytes": coll,
+        })
+    return out
+
+
+def run() -> list[str]:
+    rows = ["table,arch,shape,compute_s,memory_s,collective_s,dominant,"
+            "useful_frac,roofline_frac,temp_gb_per_dev"]
+    for r in roofline_rows():
+        rows.append(
+            f"roofline,{r['arch']},{r['shape']},{r['compute_s']:.4g},"
+            f"{r['memory_s']:.4g},{r['collective_s']:.4g},{r['dominant']},"
+            f"{r['useful_frac']:.3f},{r['roofline_frac']:.4f},"
+            f"{r['mem_temp_bytes'] / 1e9:.2f}")
+    return rows
+
+
+def markdown_table(multi_pod: bool = False) -> str:
+    rows = roofline_rows(multi_pod)
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant "
+        "| useful FLOPs frac | roofline frac | temp GB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4g} | "
+            f"{r['memory_s']:.4g} | {r['collective_s']:.4g} | "
+            f"**{r['dominant']}** | {r['useful_frac']:.3f} | "
+            f"{r['roofline_frac']:.4f} | {r['mem_temp_bytes'] / 1e9:.2f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,17 @@
+"""Paper Table II: XPC size N and PCA capacities (gamma, alpha) vs DR."""
+from __future__ import annotations
+
+from repro.core import scalability as sc
+
+
+def run() -> list[str]:
+    rows = ["table,datarate_gsps,p_pd_opt_dbm,n,gamma,alpha,src"]
+    ours = {r["datarate_gsps"]: r for r in sc.table2()}
+    for r in sc.paper_table2():
+        dr = r["datarate_gsps"]
+        o = ours[dr]
+        rows.append(f"table2,{dr},{o['p_pd_opt_dbm']},{o['n']},{o['gamma']},"
+                    f"{o['alpha']},ours")
+        rows.append(f"table2,{dr},{r['p_pd_opt_dbm']},{r['n']},{r['gamma']},"
+                    f"{r['alpha']},paper")
+    return rows

@@ -1,0 +1,31 @@
+"""Lower-and-inspect example: pick any assigned architecture x shape and
+print its production-mesh lowering summary (device memory, FLOPs,
+collective schedule) — the same path the 40-cell dry-run automates.
+
+Run:  PYTHONPATH=src python examples/multiarch_dryrun.py \
+          --arch qwen1.5-0.5b --shape decode_32k [--multi-pod]
+
+NOTE: forces 512 host devices in THIS process (first import line).
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+
+
+def main():
+    from repro.launch.dryrun import run_cell
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    res = run_cell(args.arch, args.shape, args.multi_pod)
+    print(json.dumps(res, indent=1))
+
+
+if __name__ == "__main__":
+    main()

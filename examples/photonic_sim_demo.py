@@ -1,0 +1,36 @@
+"""Photonic accelerator comparison (paper Fig. 7): simulate OXBNN_5,
+OXBNN_50, ROBIN_EO/PO and LIGHTBULB on the four evaluated BNNs and print
+FPS / FPS/W with per-layer bottleneck attribution for one network.
+
+Run:  PYTHONPATH=src python examples/photonic_sim_demo.py
+"""
+from repro.photonic import accelerators as acc
+from repro.photonic import simulator as sim
+from repro.photonic import workloads as wl
+
+
+def main():
+    nets = list(wl.WORKLOADS)
+    table = sim.compare(acc.ALL, nets)
+    print(f"{'accelerator':<11s}" + "".join(f"{n:>16s}" for n in nets) +
+          f"{'gmean FPS':>12s}{'gmean FPS/W':>12s}")
+    for name, res in table.items():
+        fps = [res[n].fps for n in nets]
+        fpw = [res[n].fps_per_w for n in nets]
+        print(f"{name:<11s}" + "".join(f"{f:16.1f}" for f in fps) +
+              f"{sim.gmean(fps):12.1f}{sim.gmean(fpw):12.1f}")
+
+    print("\nPer-layer bottlenecks, LIGHTBULB on VGG-small (first 8 layers):")
+    r = sim.simulate(acc.LIGHTBULB, "vgg_small")
+    for lr in r.layers[:8]:
+        stages = " ".join(f"{s.name}={s.time_s * 1e6:.2f}us" for s in lr.stages)
+        print(f"  {lr.layer:<8s} bottleneck={lr.bottleneck:<16s} {stages}")
+    r2 = sim.simulate(acc.OXBNN_50, "vgg_small")
+    print("\nSame layers on OXBNN_50 (no psum stage at all):")
+    for lr in r2.layers[:8]:
+        stages = " ".join(f"{s.name}={s.time_s * 1e6:.2f}us" for s in lr.stages)
+        print(f"  {lr.layer:<8s} bottleneck={lr.bottleneck:<16s} {stages}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""End-to-end driver: train the ~100M-parameter BNN LM (every projection
+binarization-aware through the OXBNN STE path) for a few hundred steps
+on synthetic Markov data, with checkpointing, then greedy-decode from it
+in full packed-XNOR inference mode.
+
+The data stream has next-token entropy log(8) ~= 2.08 nats (vocab 32k ->
+uniform loss ~10.4), so the loss signal is unambiguous.
+
+Run:  PYTHONPATH=src python examples/train_bnn_lm.py [--steps 300]
+"""
+import argparse
+
+from repro.launch.serve import serve
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/bnn_lm_ckpt")
+    args = ap.parse_args()
+
+    losses = train(
+        "bnn-lm-100m", smoke=True, steps=args.steps,
+        global_batch=args.global_batch, seq_len=args.seq_len,
+        microbatches=1, lr=1e-3, ckpt_dir=args.ckpt_dir, ckpt_every=100,
+    )
+    print(f"\nfirst-10 mean loss: {sum(losses[:10]) / 10:.4f}")
+    print(f"last-10 mean loss:  {sum(losses[-10:]) / 10:.4f}")
+
+    print("\nGreedy decode in packed-XNOR (bnn) inference mode:")
+    seqs = serve("bnn-lm-100m", smoke=True, batch=2, prompt_len=8, gen=8,
+                 precision="bnn")
+    print(seqs)
+
+
+if __name__ == "__main__":
+    main()

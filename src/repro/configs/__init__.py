@@ -1,0 +1,33 @@
+"""Architecture config registry: ``get_config("<arch-id>")``.
+
+One module per assigned architecture (exact published configs; see each
+file's source note), plus the paper-native BNN LM used by the examples.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ArchConfig, SHAPES, ShapeCell, cells_for, reduced  # noqa: F401
+
+_REGISTRY = {
+    "llama3.2-3b": "llama3_2_3b",
+    "codeqwen1.5-7b": "codeqwen1_5_7b",
+    "gemma-7b": "gemma_7b",
+    "qwen1.5-0.5b": "qwen1_5_0_5b",
+    "mamba2-1.3b": "mamba2_1_3b",
+    "musicgen-large": "musicgen_large",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite",
+    "jamba-1.5-large-398b": "jamba_1_5_large",
+    "pixtral-12b": "pixtral_12b",
+    "bnn-lm-100m": "bnn_lm_100m",
+}
+
+ARCH_IDS = [k for k in _REGISTRY if k != "bnn-lm-100m"]
+
+
+def get_config(name: str) -> ArchConfig:
+    mod = _REGISTRY.get(name)
+    if mod is None:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return importlib.import_module(f"repro.configs.{mod}").CONFIG

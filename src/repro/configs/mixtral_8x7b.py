@@ -1,0 +1,18 @@
+"""mixtral-8x7b [arXiv:2401.04088; hf].
+
+32L d_model=4096 32H GQA(kv=8) d_ff=14336 vocab=32000, MoE 8 experts
+top-2 every layer, sliding-window attention (4096).  SWA bounds the KV
+cache, so the long_500k cell runs.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mixtral-8x7b", family="moe",
+    n_layers=32, d_model=4096, vocab=32000,
+    n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=14336, act="swiglu", rope_theta=1000000.0,
+    n_experts=8, top_k=2, moe_every=1,
+    sliding_window=4096, norm="rmsnorm",
+    # shard-local dispatch (beyond-paper perf default; see EXPERIMENTS §Perf)
+    moe_dispatch_groups=0,  # auto = DP degree
+)

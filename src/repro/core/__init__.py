@@ -1,0 +1,12 @@
+"""OXBNN core: the paper's contribution in JAX.
+
+Modules:
+  binarize     Eq. (1) quantizers + STE training path
+  packing      {0,1} <-> packed uint32 words (TPU analogue of DWDM lanes)
+  xnor         XNOR-bitcount VDPs (Eq. 2), train/infer GEMM entry points
+  conv         binarized conv2d (im2col -> XNOR GEMM, Fig. 1 lowering)
+  oxg          Optical XNOR Gate behavioral model (Fig. 3)
+  pca          Photo-Charge Accumulator model (Fig. 4, Table II capacities)
+  mapping      XPC mapping schedules (Fig. 5): OXBNN vs prior-work
+  scalability  Eqs. (3)-(5) -> Table II reproduction
+"""

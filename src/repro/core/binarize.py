@@ -1,0 +1,85 @@
+"""Binary quantizers for OXBNN (paper Eq. 1) with straight-through estimators.
+
+The paper binarizes with ``Q(x) = sign(x) = x >= 0 ? +1 : -1`` and notes the
+equivalent {0,1} encoding used by its hardware (Section II-A).  We provide
+both encodings plus the LQ-Nets-style learned scale used in the paper's
+evaluation (weights binarized as ``alpha * sign(w)``), and straight-through
+estimators (STE) so ``train_4k`` shapes are trainable end-to-end.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def sign_pm1(x: Array) -> Array:
+    """Paper Eq. (1): x >= 0 ? +1 : -1 (note: sign(0) = +1, unlike jnp.sign)."""
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+def binarize_01(x: Array) -> Array:
+    """{0,1} encoding used by the XPC hardware (Section II-A)."""
+    return (x >= 0).astype(jnp.uint8)
+
+
+def pm1_to_01(b: Array) -> Array:
+    """Map {-1,+1} -> {0,1}."""
+    return (b > 0).astype(jnp.uint8)
+
+
+def b01_to_pm1(b: Array, dtype=jnp.float32) -> Array:
+    """Map {0,1} -> {-1,+1}."""
+    return (2 * b.astype(jnp.int32) - 1).astype(dtype)
+
+
+@jax.custom_vjp
+def ste_sign(x: Array) -> Array:
+    """sign() with straight-through gradient, clipped to |x|<=1 (BNN standard).
+
+    Forward: Eq. (1). Backward: dL/dx = dL/dy * 1{|x| <= 1}.
+    """
+    return sign_pm1(x)
+
+
+def _ste_sign_fwd(x):
+    return sign_pm1(x), x
+
+
+def _ste_sign_bwd(x, g):
+    return (g * (jnp.abs(x) <= 1.0).astype(g.dtype),)
+
+
+ste_sign.defvjp(_ste_sign_fwd, _ste_sign_bwd)
+
+
+def lq_scale(w: Array, axis=None) -> Array:
+    """Per-output-channel scale alpha = E[|w|] (XNOR-Net / LQ-Nets style).
+
+    The paper binarizes its BNNs with the LQ-Nets technique [9]; the
+    rank-1 approximation ``w ~= alpha * sign(w)`` with ``alpha = mean|w|``
+    is the standard closed form for the 1-bit case.
+    """
+    return jnp.mean(jnp.abs(w), axis=axis, keepdims=axis is not None)
+
+
+def binarize_weight(w: Array, reduce_axis: int = 0) -> tuple[Array, Array]:
+    """Return (sign_pm1(w), alpha) with alpha per output channel.
+
+    ``reduce_axis`` is the contraction axis of the GEMM the weight feeds.
+    """
+    alpha = jnp.mean(jnp.abs(w), axis=reduce_axis, keepdims=True)
+    return ste_sign(w), alpha
+
+
+def binary_activation(z: Array, z_max: Array | float) -> Array:
+    """Paper Section II-A, {0,1} value set:
+
+    ``compare(z, 0.5*z_max) = z > 0.5*z_max ? 1 : 0``
+
+    where ``z`` is a bitcount result and ``z_max`` is the vector size S.
+    This is exactly the comparator at the PCA's TIR output (V_REF = mid of
+    the 5V dynamic range, Fig. 4).
+    """
+    return (z > 0.5 * z_max).astype(jnp.uint8)

@@ -1,0 +1,109 @@
+"""Binarized 2-D convolution — the paper's actual workload (Sec. II-B).
+
+A conv layer is lowered exactly the way the XPC consumes it (Fig. 1):
+input windows are flattened to vectors of S = kh*kw*C_in (im2col via
+``conv_general_dilated_patches``), weights to (C_out, S), and the whole
+layer becomes ONE packed XNOR-bitcount GEMM — each output pixel is one
+PCA bitcount result, optionally pushed through the fused comparator to
+emit the next layer's binary activations without leaving the kernel.
+
+Supports the same precision modes as bnn_dense:
+  bf16       float conv (reference/baseline path)
+  bnn_train  STE-binarized conv (differentiable)
+  bnn        packed XNOR-popcount (pallas or xla impl)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing, xnor
+from repro.core.binarize import ste_sign
+
+Array = jax.Array
+
+
+def _im2col(x: Array, kh: int, kw: int, stride: int, padding: str) -> Array:
+    """x: (B, H, W, C) -> patches (B, H', W', kh*kw*C)."""
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (kh, kw), (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    # conv_general_dilated_patches returns channels ordered (C, kh, kw);
+    # reorder to (kh, kw, C) to match the flattened HWIO weight layout.
+    b, ho, wo, _ = patches.shape
+    c = x.shape[-1]
+    patches = patches.reshape(b, ho, wo, c, kh * kw)
+    patches = jnp.swapaxes(patches, -1, -2)
+    return patches.reshape(b, ho, wo, kh * kw * c)
+
+
+def bnn_conv2d(x: Array, w: Array, *, stride: int = 1,
+               padding: str = "SAME", precision: str = "bnn",
+               impl: str = "auto", scale: bool = False,
+               binary_out: bool = False) -> Array:
+    """x: (B, H, W, C_in) float; w: (kh, kw, C_in, C_out) latent float.
+
+    binary_out=True fuses the PCA comparator (paper Sec. II-A): returns
+    uint8 activations compare(z, S/2) instead of the dot product.
+    """
+    kh, kw, cin, cout = w.shape
+    s = kh * kw * cin
+
+    if precision == "bf16":
+        return jax.lax.conv_general_dilated(
+            x, w, (stride, stride), padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+    patches = _im2col(x, kh, kw, stride, padding)       # (B,H',W',S)
+    b, ho, wo, _ = patches.shape
+    flat = patches.reshape(b * ho * wo, s)
+    w2d = w.reshape(s, cout)
+
+    if precision == "bnn_train":
+        y = xnor.bnn_matmul_train(flat, w2d, scale=scale)
+        return y.reshape(b, ho, wo, cout)
+
+    if precision != "bnn":
+        raise ValueError(precision)
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "pallas":
+        from repro.kernels import binarize_pack as bp
+        from repro.kernels import xnor_popcount as xp
+        ip = bp.binarize_pack(flat.astype(jnp.float32))
+        wp = bp.binarize_pack(w2d.astype(jnp.float32).T)
+        dot = xp.xnor_popcount_matmul(ip, wp, s, mode="dot")
+    else:
+        ip = packing.pack_pm1(flat, axis=-1)
+        wp = jnp.swapaxes(packing.pack_pm1(w2d, axis=0), 0, 1)
+        z = xnor.xnor_matmul_packed(ip, wp, s)
+        dot = 2 * z - s
+    dot = dot.reshape(b, ho, wo, cout).astype(jnp.float32)
+
+    if padding == "SAME" and (kh > 1 or kw > 1):
+        # Boundary correction: SAME-padded zeros binarize to +1 in the
+        # packed path (sign(0)=+1) but contribute 0 in ±1 conv algebra —
+        # on the XPC, border windows simply have shorter vectors
+        # (Fig. 1). Exact closed form: padded contribution per output =
+        # sum(sign(w)) - conv(ones, sign(w), SAME); subtract it.
+        ws = ste_sign(w.astype(jnp.float32))
+        ones = jnp.ones((b, x.shape[1], x.shape[2], cin), jnp.float32)
+        inside = jax.lax.conv_general_dilated(
+            ones, ws, (stride, stride), padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        total = jnp.sum(ws, axis=(0, 1, 2))[None, None, None, :]
+        dot = dot - (total - inside)
+
+    if binary_out:
+        return (dot > 0).astype(jnp.uint8)  # == compare(z, S_eff/2)
+    return dot
+
+
+def reference_sign_conv2d(x: Array, w: Array, *, stride: int = 1,
+                          padding: str = "SAME") -> Array:
+    """Oracle: float conv of sign(x) with sign(w) (the {-1,+1} math)."""
+    xs = ste_sign(x.astype(jnp.float32))
+    ws = ste_sign(w.astype(jnp.float32))
+    return jax.lax.conv_general_dilated(
+        xs, ws, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))

@@ -1,0 +1,89 @@
+"""Bitpacking: {0,1} bit tensors <-> packed uint32 words along the reduction axis.
+
+On the photonic XPC, N binary elements travel in parallel on N DWDM
+wavelengths.  The TPU-native analogue is SIMD: 32 binary elements per
+uint32 word, with the VPU processing 8x128 words per cycle.  All XNOR
+GEMMs contract over the packed axis.
+
+Packing layout: the reduction axis (last axis by convention here) is
+padded to a multiple of 32 and packed little-endian (bit j of word k holds
+element ``32*k + j``).  Padding bits are zero in BOTH operands; because
+XNOR(0,0)=1 would corrupt the bitcount, the popcount path subtracts the
+pad correction (see xnor.py) — property-tested in tests/test_packing.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+WORD_BITS = 32
+
+
+def packed_len(s: int) -> int:
+    return (s + WORD_BITS - 1) // WORD_BITS
+
+
+def pad_to_word(x01: Array, axis: int = -1) -> Array:
+    """Zero-pad the given axis of a {0,1} tensor to a multiple of 32."""
+    s = x01.shape[axis]
+    pad = (-s) % WORD_BITS
+    if pad == 0:
+        return x01
+    widths = [(0, 0)] * x01.ndim
+    widths[axis if axis >= 0 else x01.ndim + axis] = (0, pad)
+    return jnp.pad(x01, widths)
+
+
+def pack_bits(x01: Array, axis: int = -1) -> Array:
+    """Pack a {0,1} tensor into uint32 words along ``axis``.
+
+    Shape: (..., S, ...) -> (..., ceil(S/32), ...).
+    """
+    axis = axis if axis >= 0 else x01.ndim + axis
+    x01 = pad_to_word(x01.astype(jnp.uint32), axis)
+    s_pad = x01.shape[axis]
+    new_shape = x01.shape[:axis] + (s_pad // WORD_BITS, WORD_BITS) + x01.shape[axis + 1:]
+    xw = x01.reshape(new_shape)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    # broadcast shifts along the bit axis (axis+1 after the reshape)
+    shifts = shifts.reshape((1,) * (axis + 1) + (WORD_BITS,) + (1,) * (x01.ndim - axis - 1))
+    return jnp.sum(xw << shifts, axis=axis + 1).astype(jnp.uint32)
+
+
+def unpack_bits(xw: Array, s: int, axis: int = -1) -> Array:
+    """Inverse of pack_bits: uint32 words -> {0,1} uint8 tensor of length s."""
+    axis = axis if axis >= 0 else xw.ndim + axis
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    shifts = shifts.reshape((1,) * (axis + 1) + (WORD_BITS,) + (1,) * (xw.ndim - axis - 1))
+    bits = (jnp.expand_dims(xw, axis + 1) >> shifts) & jnp.uint32(1)
+    new_shape = xw.shape[:axis] + (xw.shape[axis] * WORD_BITS,) + xw.shape[axis + 1:]
+    bits = bits.reshape(new_shape)
+    index = [slice(None)] * bits.ndim
+    index[axis] = slice(0, s)
+    return bits[tuple(index)].astype(jnp.uint8)
+
+
+def popcount_u32(x: Array) -> Array:
+    """Population count of a uint32 tensor (SWAR bit-twiddle; VPU-friendly).
+
+    Classic 5-op parallel bit count — identical algebra lowers to TPU
+    integer VPU ops inside the Pallas kernel.
+    """
+    x = x.astype(jnp.uint32)
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((x * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def pack_pm1(x: Array, axis: int = -1) -> Array:
+    """Pack a {-1,+1} (or real, sign-taken) tensor: bit=1 iff x>=0."""
+    return pack_bits((x >= 0).astype(jnp.uint32), axis=axis)
+
+
+def random_bits(key: jax.Array, shape: tuple[int, ...]) -> np.ndarray:
+    """Deterministic {0,1} test helper."""
+    return jax.random.bernoulli(key, 0.5, shape).astype(jnp.uint8)

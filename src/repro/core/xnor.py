@@ -1,0 +1,94 @@
+"""XNOR-bitcount vector-dot-products (paper Eq. 2) — reference implementations.
+
+Identities (property-tested):
+  * {0,1} encoding:  z = bitcount(XNOR(I, W)) = #{k : I_k == W_k}
+  * {-1,+1} encoding: dot(I, W) = 2*z - S   (S = vector size)
+
+The packed path contracts over uint32 words: popcount(~(iw ^ ww)).  Zero
+padding to a word multiple makes pad positions agree (0==0 -> XNOR=1), so
+the padded bitcount overcounts by exactly (S_pad - S); we subtract it.
+
+The performance-critical tiled version lives in ``repro.kernels``
+(Pallas); everything here is the pure-jnp oracle and the autodiff-able
+training path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core.binarize import ste_sign
+
+Array = jax.Array
+
+
+def xnor_bitcount_01(i01: Array, w01: Array) -> Array:
+    """Oracle: bitcount of elementwise XNOR over the last axis ({0,1} inputs)."""
+    agree = (i01.astype(jnp.int32) == w01.astype(jnp.int32)).astype(jnp.int32)
+    return jnp.sum(agree, axis=-1)
+
+
+def dot_pm1(i_pm1: Array, w_pm1: Array) -> Array:
+    """Oracle: integer dot product of {-1,+1} vectors over the last axis."""
+    return jnp.sum(i_pm1.astype(jnp.int32) * w_pm1.astype(jnp.int32), axis=-1)
+
+
+def xnor_bitcount_packed(ip: Array, wp: Array, s: int) -> Array:
+    """bitcount(XNOR) over packed uint32 words (last axis), pad-corrected.
+
+    ``s`` is the true (unpadded) vector length; the packed length is
+    ``ceil(s/32)`` words.
+    """
+    xnor = ~(ip ^ wp)
+    z_pad = jnp.sum(packing.popcount_u32(xnor), axis=-1)
+    overcount = ip.shape[-1] * packing.WORD_BITS - s
+    return z_pad - overcount
+
+
+def xnor_matmul_packed(ip: Array, wp: Array, s: int) -> Array:
+    """Packed XNOR-bitcount 'matmul': (..., M, Kw) x (N, Kw) -> (..., M, N) int32.
+
+    Every output element is one PCA bitcount result (paper Fig. 5 'Final
+    Result'): the full reduction over all Kw words happens in one
+    accumulator — no psum materialization (the PCA property).
+    """
+    xnor = ~(ip[..., :, None, :] ^ wp[None, :, :])
+    z_pad = jnp.sum(packing.popcount_u32(xnor), axis=-1)
+    overcount = ip.shape[-1] * packing.WORD_BITS - s
+    return z_pad - overcount
+
+
+def bnn_matmul_train(x: Array, w: Array, scale: bool = True) -> Array:
+    """Binarization-aware GEMM for training: y = (sign(x) @ sign(w)) * alpha.
+
+    Differentiable through STE; runs on the MXU in bf16/f32.  ``w`` has
+    shape (K, N); alpha is the per-output-channel LQ-Nets scale of the
+    latent weight.
+    """
+    xb = ste_sign(x)
+    wb = ste_sign(w)
+    y = jnp.matmul(xb, wb, preferred_element_type=jnp.float32)
+    if scale:
+        alpha = jnp.mean(jnp.abs(w), axis=0, keepdims=True)
+        y = y * alpha
+    return y.astype(x.dtype)
+
+
+def bnn_matmul_infer(x: Array, w: Array, scale: bool = True) -> Array:
+    """Inference GEMM via packed XNOR-bitcount ({-1,+1} semantics).
+
+    dot = 2*z - S, then optionally scaled by alpha.  Pure-jnp oracle; the
+    Pallas kernel (repro.kernels.ops.xnor_matmul) computes the same thing
+    tiled for VMEM.
+    """
+    s = x.shape[-1]
+    ip = packing.pack_pm1(x, axis=-1)
+    wp = packing.pack_pm1(w, axis=0)  # (K, N) -> pack K -> (Kw, N)
+    wp = jnp.swapaxes(wp, -1, -2)  # (N, Kw)
+    z = xnor_matmul_packed(ip, wp, s)
+    y = (2 * z - s).astype(jnp.float32)
+    if scale:
+        alpha = jnp.mean(jnp.abs(w), axis=0, keepdims=True)
+        y = y * alpha
+    return y.astype(x.dtype) if jnp.issubdtype(x.dtype, jnp.floating) else y

@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: fused binarize + bitpack (the 'OXG operand drive').
+
+Binarizes a float activation tile against a threshold and packs 32
+elements per uint32 word in one VMEM pass — the producer side of the
+XNOR GEMM.  Fusing the comparator (paper Fig. 4) with the pack avoids a
+full-precision round-trip of the activation tensor through HBM.
+
+Layout: input (M, S) float; output (M, S/32) uint32, little-endian bit
+order (bit j of word k = element 32k + j), identical to
+repro.core.packing.pack_bits.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+WORD_BITS = 32
+DEFAULT_BM = 256
+DEFAULT_BKW = 64   # words per block (= 2048 elements)
+
+
+def _binarize_pack_kernel(x_ref, out_ref, *, threshold: float, bkw: int):
+    x = x_ref[...]  # (bm, bkw*32)
+    bm = x.shape[0]
+    bits = (x >= threshold).astype(jnp.uint32)
+    bits = bits.reshape(bm, bkw, WORD_BITS)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)[None, None, :]
+    out_ref[...] = jnp.sum(bits << shifts, axis=-1).astype(jnp.uint32)
+
+
+def binarize_pack(x: Array, *, threshold: float = 0.0,
+                  bm: int = DEFAULT_BM, bkw: int = DEFAULT_BKW,
+                  interpret: bool | None = None) -> Array:
+    """(M, S) float -> (M, ceil(S/32)) uint32 packed sign bits."""
+    m, s = x.shape
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    kw = -(-s // WORD_BITS)
+    bm = min(bm, m)
+    bkw = min(bkw, kw)
+
+    # pad: elements below threshold pack to 0 bits, so pad with -1.0
+    pad_s = (-s) % (bkw * WORD_BITS)
+    pad_m = (-m) % bm
+    xp = jnp.pad(x, ((0, pad_m), (0, pad_s)), constant_values=-1.0)
+    mp, sp = xp.shape
+    kwp = sp // WORD_BITS
+
+    kernel = functools.partial(_binarize_pack_kernel, threshold=threshold, bkw=bkw)
+    out = pl.pallas_call(
+        kernel,
+        grid=(mp // bm, kwp // bkw),
+        in_specs=[pl.BlockSpec((bm, bkw * WORD_BITS), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, bkw), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, kwp), jnp.uint32),
+        interpret=interpret,
+    )(xp)
+    return out[:m, :kw]

@@ -1,0 +1,82 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``bnn_dense`` is the entry point the model layers use:
+  * precision="bf16": ordinary MXU matmul (baseline / non-binarized path)
+  * precision="bnn_train": STE-binarized MXU matmul (differentiable)
+  * precision="bnn": packed XNOR-popcount inference path
+      impl="pallas"  the TPU kernel (interpret=True off-TPU)
+      impl="xla"     same packed math in plain XLA ops (used under the
+                     512-device dry-run partitioner; see DESIGN.md)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing, xnor
+from repro.kernels import binarize_pack as _bp
+from repro.kernels import xnor_popcount as _xp
+
+Array = jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("s", "mode"))
+def xnor_matmul(ip: Array, wp: Array, s: int, mode: str = "dot",
+                alpha: Array | None = None) -> Array:
+    """jit'd packed XNOR GEMM via the Pallas kernel."""
+    return _xp.xnor_popcount_matmul(ip, wp, s, mode=mode, alpha=alpha)
+
+
+@functools.partial(jax.jit, static_argnames=("threshold",))
+def pack_activations(x: Array, threshold: float = 0.0) -> Array:
+    """jit'd fused binarize+pack via the Pallas kernel."""
+    return _bp.binarize_pack(x, threshold=threshold)
+
+
+def xnor_matmul_xla(ip: Array, wp: Array, s: int, mode: str = "dot",
+                    alpha: Array | None = None) -> Array:
+    """Packed XNOR GEMM in plain XLA ops (identical math, shardable)."""
+    z = xnor.xnor_matmul_packed(ip, wp, s)
+    if mode == "bitcount":
+        return z
+    if mode == "dot":
+        return 2 * z - s
+    if mode == "dot_scaled":
+        return ((2 * z - s).astype(jnp.float32) * alpha[None, :])
+    if mode == "binary_act":
+        return (z > s / 2).astype(jnp.uint8)
+    raise ValueError(mode)
+
+
+def bnn_dense(x: Array, w: Array, *, precision: str = "bf16",
+              impl: str = "auto", scale: bool = True) -> Array:
+    """Dense projection with selectable precision path.
+
+    x: (..., K) activations; w: (K, N) latent weights (float).
+    """
+    if precision == "bf16":
+        return jnp.matmul(x, w.astype(x.dtype))
+    if precision == "bnn_train":
+        lead = x.shape[:-1]
+        y = xnor.bnn_matmul_train(x.reshape(-1, x.shape[-1]), w, scale=scale)
+        return y.reshape(*lead, w.shape[-1])
+    if precision == "bnn":
+        if impl == "auto":
+            impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        s = x2.shape[-1]
+        alpha = jnp.mean(jnp.abs(w), axis=0) if scale else None
+        mode = "dot_scaled" if scale else "dot"
+        if impl == "pallas":
+            ip = _bp.binarize_pack(x2.astype(jnp.float32))
+            wp = _bp.binarize_pack(w.astype(jnp.float32).T)
+            y = _xp.xnor_popcount_matmul(ip, wp, s, mode=mode, alpha=alpha)
+        else:
+            ip = packing.pack_pm1(x2, axis=-1)
+            wp = jnp.swapaxes(packing.pack_pm1(w, axis=0), 0, 1)
+            y = xnor_matmul_xla(ip, wp, s, mode=mode, alpha=alpha)
+        return y.reshape(*lead, w.shape[-1]).astype(x.dtype)
+    raise ValueError(f"unknown precision {precision!r}")

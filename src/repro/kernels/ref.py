@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These mirror the kernel semantics exactly (including pad handling) and
+are the ground truth for tests/test_xnor_kernel.py shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+
+Array = jax.Array
+
+
+def xnor_popcount_matmul_ref(ip: Array, wp: Array, s: int,
+                             mode: str = "dot",
+                             alpha: Array | None = None) -> Array:
+    """Oracle for the packed XNOR-bitcount GEMM.
+
+    ip: (M, Kw) uint32 packed inputs; wp: (N, Kw) uint32 packed weights;
+    s: true contraction length (bits).  Modes:
+      "bitcount"   z           (int32)            — the PCA readout
+      "dot"        2z - s      (int32)            — {-1,+1} dot product
+      "dot_scaled" (2z - s)*alpha (float32)       — LQ-Nets scaled GEMM
+      "binary_act" z > s/2     (uint8)            — fused PCA comparator
+    """
+    m, kw = ip.shape
+    n, kw2 = wp.shape
+    assert kw == kw2
+    xnor = ~(ip[:, None, :] ^ wp[None, :, :])
+    z = jnp.sum(packing.popcount_u32(xnor), axis=-1).astype(jnp.int32)
+    z = z - (kw * packing.WORD_BITS - s)  # pad correction
+    if mode == "bitcount":
+        return z
+    if mode == "dot":
+        return 2 * z - s
+    if mode == "dot_scaled":
+        assert alpha is not None
+        return ((2 * z - s).astype(jnp.float32) * alpha[None, :]).astype(jnp.float32)
+    if mode == "binary_act":
+        return (z > s / 2).astype(jnp.uint8)
+    raise ValueError(mode)
+
+
+def binarize_pack_ref(x: Array, threshold: float = 0.0) -> Array:
+    """Oracle for the fused binarize+pack kernel: bit = (x >= threshold)."""
+    return packing.pack_bits((x >= threshold).astype(jnp.uint32), axis=-1)

@@ -1,0 +1,129 @@
+"""Optimized-HLO analysis for the dry-run: EXECUTED collective traffic.
+
+XLA's cost analysis (and a naive text grep) counts a while-loop body
+once, but ``lax.scan`` bodies (layer stacks, microbatch accumulation)
+execute ``trip_count`` times.  XLA:CPU annotates each while with
+``backend_config={"known_trip_count":{"n":...}}``; we parse the
+computation graph, propagate nesting multipliers through while bodies /
+fusions / called computations, and weight every collective op by the
+product of enclosing trip counts.
+
+This is what the roofline collective term uses; the static counts are
+also reported (they describe the schedule shape).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+    "pred": 1, "s64": 8, "u64": 8, "f64": 8, "s16": 2, "u16": 2, "c64": 8,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_WHILE = re.compile(
+    r"while\(.*?\), condition=%?([\w\.\-]+), body=%?([\w\.\-]+)")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL = re.compile(r"(?:calls|to_apply|branch_computations)=\{?%?([\w\.\-]+)")
+_COND_CONST = re.compile(r"constant\((\d+)\)")
+_COLL_OP = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:\w+\[[\d,]*\]))\S*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _bytes_of_shapes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dtype, 4)
+    return total
+
+
+def _split_computations(hlo: str) -> tuple[dict[str, list[str]], str]:
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur = None
+    for line in hlo.splitlines():
+        m = _COMP_HDR.match(line.strip())
+        if m and line.rstrip().endswith("{"):
+            cur = m.group(2)
+            comps[cur] = []
+            if m.group(1):
+                entry = cur
+            continue
+        if cur is not None:
+            if line.startswith("}"):
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps, entry or ""
+
+
+def analyze_collectives(hlo: str) -> dict:
+    comps, entry = _split_computations(hlo)
+
+    # edges: computation -> [(child, multiplier_factor)]
+    edges: dict[str, list[tuple[str, int]]] = defaultdict(list)
+    for name, lines in comps.items():
+        for ln in lines:
+            wm = _WHILE.search(ln)
+            if wm:
+                cond, body = wm.groups()
+                tm = _TRIP.search(ln)
+                if tm:
+                    trip = int(tm.group(1))
+                else:
+                    trip = 1
+                    cm = _COND_CONST.findall("\n".join(comps.get(cond, [])))
+                    if cm:
+                        trip = max(int(c) for c in cm)
+                edges[name].append((body, trip))
+                edges[name].append((cond, trip))
+                continue
+            for cm in _CALL.finditer(ln):
+                edges[name].append((cm.group(1), 1))
+
+    # propagate multipliers from entry
+    mult: dict[str, int] = defaultdict(int)
+    mult[entry] = 1
+    stack = [entry]
+    seen_pairs = set()
+    while stack:
+        cur = stack.pop()
+        for child, factor in edges.get(cur, ()):  # may revisit with larger mult
+            new = mult[cur] * factor
+            if new > mult[child]:
+                mult[child] = new
+                stack.append(child)
+            elif (cur, child) not in seen_pairs:
+                seen_pairs.add((cur, child))
+
+    stats = {c: {"count": 0, "bytes_static": 0, "bytes_executed": 0}
+             for c in COLLECTIVES}
+    for name, lines in comps.items():
+        m = mult.get(name, 1) or 1
+        for ln in lines:
+            if "-done" in ln:
+                continue
+            om = _COLL_OP.search(ln)
+            if not om:
+                continue
+            shape_text, kind, _ = om.groups()
+            b = _bytes_of_shapes(shape_text)
+            stats[kind]["count"] += 1
+            stats[kind]["bytes_static"] += b
+            stats[kind]["bytes_executed"] += b * m
+    stats["total_bytes_static"] = sum(
+        v["bytes_static"] for k, v in stats.items() if isinstance(v, dict))
+    stats["total_bytes_executed"] = sum(
+        v["bytes_executed"] for k, v in stats.items() if isinstance(v, dict))
+    return stats

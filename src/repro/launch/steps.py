@@ -1,0 +1,138 @@
+"""Step builders: train (microbatched grad accumulation + AdamW update),
+prefill, and decode — plus abstract input specs per (arch x shape) cell.
+
+These are the functions the dry-run lowers and the real launcher runs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.layers import common as C
+from repro.models import transformer as M
+from repro.optim import optimizer as opt_mod
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# abstract input specs (ShapeDtypeStruct stand-ins; no allocation)
+
+
+def input_specs(cfg: ArchConfig, cell: ShapeCell, *, compute_dtype=jnp.bfloat16):
+    """Batch ShapeDtypeStructs for one shape cell."""
+    b, t = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+    if cell.kind in ("train", "prefill"):
+        batch: dict[str, Any] = {}
+        if cfg.frontend == "audio":
+            batch["embeds"] = jax.ShapeDtypeStruct((b, t, cfg.d_model), compute_dtype)
+        elif cfg.frontend == "vlm":
+            p = cfg.frontend_prefix
+            batch["prefix_embeds"] = jax.ShapeDtypeStruct((b, p, cfg.d_model), compute_dtype)
+            batch["tokens"] = jax.ShapeDtypeStruct((b, t - p), i32)
+        else:
+            batch["tokens"] = jax.ShapeDtypeStruct((b, t), i32)
+        if cell.kind == "train":
+            t_lab = t - cfg.frontend_prefix if cfg.frontend == "vlm" else t
+            batch["labels"] = jax.ShapeDtypeStruct((b, t_lab), i32)
+        return batch
+    # decode: one new token against a full cache of length seq_len
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+        "length": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+def cache_specs_abstract(cfg: ArchConfig, cell: ShapeCell,
+                         compute_dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: M.init_cache(cfg, cell.global_batch, cell.seq_len,
+                             compute_dtype))
+
+
+def to_dtype_structs(tree, dtype=jnp.bfloat16):
+    """Re-type float leaves of a ShapeDtypeStruct tree (dry-run bf16)."""
+    def one(s):
+        if jnp.issubdtype(s.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(s.shape, dtype)
+        return s
+    return jax.tree.map(one, tree)
+
+
+# ---------------------------------------------------------------------------
+# steps
+
+
+def build_train_step(cfg: ArchConfig, opt_cfg: opt_mod.AdamWConfig, *,
+                     microbatches: int = 8, loss_chunk: int = 2048):
+    """Returns train_step(params, opt_state, batch) -> (params', state', metrics).
+
+    Gradient accumulation over `microbatches` via lax.scan bounds the
+    activation working set; each microbatch is fully rematerialized
+    (per-period checkpointing) on the backward pass.
+    """
+
+    def loss_for(p, mb):
+        return M.loss_fn(p, cfg, mb, loss_chunk=loss_chunk, remat=True)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_for, has_aux=True)(params, batch)
+        else:
+            def split(x):
+                g = microbatches
+                y = x.reshape(g, x.shape[0] // g, *x.shape[1:])
+                return y
+
+            mbs = jax.tree.map(split, batch)
+
+            def mb_step(carry, mb):
+                gacc, lacc = carry
+                mb = jax.tree.map(lambda x: C.lsc(x, "batch", *([None] * (x.ndim - 1))), mb)
+                (l, _), g = jax.value_and_grad(loss_for, has_aux=True)(params, mb)
+                gacc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32), gacc, g)
+                return (gacc, lacc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), _ = jax.lax.scan(
+                mb_step, (g0, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss_sum / microbatches
+
+        new_params, new_state, om = opt_mod.update(opt_cfg, grads, opt_state, params)
+        metrics = {"loss": loss, **om}
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def build_prefill_step(cfg: ArchConfig):
+    """serve_step for prefill cells: forward, last-position logits.
+
+    (KV write-back is omitted in the dry-run measurement — it is pure
+    DMA, small next to the forward FLOPs; see DESIGN.md.)
+    """
+    def prefill_step(params, batch):
+        h, _ = M.hidden_states(params, cfg, batch)
+        head = params["embed"]["w"].T if cfg.tie_embeddings else params["head"]["w"]
+        return jnp.einsum("bd,dv->bv", h[:, -1], head)
+
+    return prefill_step
+
+
+def build_decode_step(cfg: ArchConfig):
+    """serve_step for decode cells: one token in, next-token ids out."""
+    def decode_step(params, caches, batch):
+        logits, caches = M.decode_step(params, cfg, batch["tokens"], caches,
+                                       batch["length"])
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, caches
+
+    return decode_step

@@ -1,0 +1,158 @@
+"""Grouped-query attention with chunked online-softmax (flash-style in jnp).
+
+Never materializes the full (T, S) score matrix: queries are processed
+in chunks of ``q_chunk`` and, for each, KV is scanned in chunks of
+``kv_chunk`` with a running (max, sum, acc) online softmax.  Supports
+causal masking, sliding windows (Mixtral), GQA/MQA head grouping, and
+single-token decode against a KV cache.
+
+Shapes: q (B, T, H, Dh), k/v (B, S, Hkv, Dh); H = G * Hkv.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def _chunk_attend(q, k, v, q_pos, k_pos, causal, window, kv_len):
+    """Scores + online-softmax terms for one (q_chunk, kv_chunk) tile.
+
+    q: (B, Tq, H, Dh); k, v: (B, Sk, Hkv, Dh).
+    Returns (m, l, o) partials: m (B, H, Tq), l (B, H, Tq), o (B, Tq, H, Dh).
+    """
+    b, tq, h, dh = q.shape
+    sk = k.shape[1]
+    hkv = k.shape[2]
+    g = h // hkv
+    qf = q.astype(jnp.float32) * (dh ** -0.5)
+    kf = k.astype(jnp.float32)
+    # (B, Hkv, G, Tq, Sk)
+    scores = jnp.einsum("btkgd,bskd->bkgts", qf.reshape(b, tq, hkv, g, dh), kf)
+    mask = jnp.ones((tq, sk), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None and window > 0:
+        mask &= q_pos[:, None] - k_pos[None, :] < window
+    if kv_len is not None:
+        mask &= (k_pos < kv_len)[None, :]
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    m = jnp.max(scores, axis=-1)                        # (B,Hkv,G,Tq)
+    p = jnp.exp(scores - m[..., None])
+    # zero out fully-masked rows (m == NEG_INF)
+    valid = m > NEG_INF / 2
+    p = jnp.where(valid[..., None], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bkgts,bskd->btkgd", p, v.astype(jnp.float32))
+    return m, l, o.reshape(b, tq, h, v.shape[-1]), valid
+
+
+def _merge(m1, l1, o1, m2, l2, o2):
+    """Merge two online-softmax partials."""
+    m = jnp.maximum(m1, m2)
+    a1 = jnp.exp(m1 - m)
+    a2 = jnp.exp(m2 - m)
+    l = l1 * a1 + l2 * a2
+    b, hkv, g, tq = m.shape
+    sh = (b, tq, hkv * g, 1)
+    o = o1 * a1.transpose(0, 3, 1, 2).reshape(sh) + \
+        o2 * a2.transpose(0, 3, 1, 2).reshape(sh)
+    return m, l, o
+
+
+def attention(q: Array, k: Array, v: Array, *,
+              causal: bool = True,
+              window: int | None = None,
+              q_offset: int = 0,
+              kv_len: Array | None = None,
+              q_chunk: int = 512,
+              kv_chunk: int = 1024) -> Array:
+    """Chunked flash-style attention.
+
+    q_offset: absolute position of q[0] (for decode: cache length).
+    kv_len: optional dynamic valid length of k/v (decode with cache).
+    """
+    b, t, h, dh = q.shape
+    s = k.shape[1]
+    hkv = k.shape[2]
+    dv = v.shape[3]
+    q_chunk = min(q_chunk, t)
+    kv_chunk = min(kv_chunk, s)
+    # pad seq dims to chunk multiples
+    tp = -(-t // q_chunk) * q_chunk
+    sp = -(-s // kv_chunk) * kv_chunk
+    qp = jnp.pad(q, ((0, 0), (0, tp - t), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+    eff_len = kv_len if kv_len is not None else s
+
+    nq = tp // q_chunk
+    nk = sp // kv_chunk
+
+    q_pos_base = jnp.arange(q_chunk)
+    k_pos_base = jnp.arange(kv_chunk)
+
+    def one_q_chunk(qc, qi):
+        q_pos = q_pos_base + qi * q_chunk + q_offset
+
+        def kv_step(carry, ki):
+            # dynamic_slice from the original (B,S,...) layout — a
+            # reshape+transpose into stacked chunks would materialize a
+            # full copy of K/V (17 GB/device for a 32k x bs128 decode
+            # cache; see EXPERIMENTS.md §Perf, decode cell).
+            m1, l1, o1 = carry
+            kc = jax.lax.dynamic_slice_in_dim(kp, ki * kv_chunk, kv_chunk, 1)
+            vc = jax.lax.dynamic_slice_in_dim(vp, ki * kv_chunk, kv_chunk, 1)
+            k_pos = k_pos_base + ki * kv_chunk
+            m2, l2, o2, _ = _chunk_attend(
+                qc, kc, vc, q_pos, k_pos, causal, window, eff_len)
+            return _merge(m1, l1, o1, m2, l2, o2), None
+
+        g = h // hkv
+        m0 = jnp.full((b, hkv, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_chunk), jnp.float32)
+        o0 = jnp.zeros((b, q_chunk, h, dv), jnp.float32)
+        (m, l, o), _ = jax.lax.scan(kv_step, (m0, l0, o0), jnp.arange(nk))
+        l = jnp.maximum(l, 1e-20)
+        o = o / l.transpose(0, 3, 1, 2).reshape(b, q_chunk, h, 1)
+        return o
+
+    if nq == 1:
+        out = one_q_chunk(qp, 0)
+    else:
+        out = jax.lax.map(
+            lambda qi: one_q_chunk(
+                jax.lax.dynamic_slice_in_dim(qp, qi * q_chunk, q_chunk, 1), qi),
+            jnp.arange(nq))
+        out = out.transpose(1, 0, 2, 3, 4).reshape(b, tp, h, dv)
+    return out[:, :t].astype(q.dtype)
+
+
+def attention_reference(q, k, v, *, causal=True, window=None, q_offset=0,
+                        kv_len=None):
+    """O(T*S) reference for tests."""
+    b, t, h, dh = q.shape
+    s = k.shape[1]
+    hkv = k.shape[2]
+    g = h // hkv
+    kf = jnp.repeat(k, g, axis=2).astype(jnp.float32)
+    vf = jnp.repeat(v, g, axis=2).astype(jnp.float32)
+    scores = jnp.einsum("bthd,bshd->bhts", q.astype(jnp.float32) * dh ** -0.5, kf)
+    q_pos = jnp.arange(t) + q_offset
+    k_pos = jnp.arange(s)
+    mask = jnp.ones((t, s), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None and window > 0:
+        mask &= q_pos[:, None] - k_pos[None, :] < window
+    if kv_len is not None:
+        mask &= (k_pos < kv_len)[None, :]
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhts,bshd->bthd", p, vf)
+    return out.astype(q.dtype)

@@ -1,0 +1,88 @@
+"""GQA attention block: QKV/O projections + RoPE + KV cache around the
+chunked flash attention core."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import attention as attn_mod
+from repro.layers import common as C
+
+Array = jax.Array
+
+
+def init(key, cfg, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p, s = {}, {}
+    p["q"], s["q"] = C.dense_init(ks[0], cfg.d_model, h * dh,
+                                  ("embed", "heads"), bias=cfg.qkv_bias, dtype=dtype)
+    p["k"], s["k"] = C.dense_init(ks[1], cfg.d_model, hkv * dh,
+                                  ("embed", "kv_heads"), bias=cfg.qkv_bias, dtype=dtype)
+    p["v"], s["v"] = C.dense_init(ks[2], cfg.d_model, hkv * dh,
+                                  ("embed", "kv_heads"), bias=cfg.qkv_bias, dtype=dtype)
+    p["o"], s["o"] = C.dense_init(ks[3], h * dh, cfg.d_model,
+                                  ("heads", "embed"), dtype=dtype)
+    return p, s
+
+
+def _qkv(params, cfg, x, positions, precision):
+    b, t, _ = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = C.dense(x, params["q"], precision).reshape(b, t, h, dh)
+    k = C.dense(x, params["k"], precision).reshape(b, t, hkv, dh)
+    v = C.dense(x, params["v"], precision).reshape(b, t, hkv, dh)
+    q = C.apply_rope(q, positions, cfg.rope_theta)
+    k = C.apply_rope(k, positions, cfg.rope_theta)
+    # head-sharding preferred; head_dim split is the automatic fallback
+    # when the head count does not divide the 'model' axis (dedup +
+    # divisibility in logical_to_pspec) — e.g. llama's 24 q-heads or
+    # 8 kv-heads on a 16-way axis.
+    q = C.lsc(q, "batch", None, "heads_dim", "head_dim")
+    k = C.lsc(k, "batch", None, "kv_heads_dim", "head_dim")
+    v = C.lsc(v, "batch", None, "kv_heads_dim", "head_dim")
+    return q, k, v
+
+
+def forward(params, cfg, x: Array, positions: Array, *,
+            precision: str = "bf16") -> Array:
+    b, t, _ = x.shape
+    q, k, v = _qkv(params, cfg, x, positions, precision)
+    o = attn_mod.attention(q, k, v, causal=True, window=cfg.sliding_window,
+                           q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    o = o.reshape(b, t, cfg.n_heads * cfg.head_dim)
+    return C.dense(o, params["o"], precision)
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.float32):
+    # sliding-window archs only need a window-sized ring; we keep it
+    # simple: window-bounded length for SWA, full length otherwise.
+    length = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, length, hkv, dh), dtype),
+        "v": jnp.zeros((batch, length, hkv, dh), dtype),
+    }
+
+
+def decode_step(params, cfg, x: Array, cache, length: Array, *,
+                precision: str = "bf16") -> tuple[Array, dict]:
+    """One-token decode; cache k/v updated in place at ``length``
+    (ring-buffer position for sliding-window archs)."""
+    b = x.shape[0]
+    positions = jnp.full((b, 1), length, jnp.int32)
+    q, k, v = _qkv(params, cfg, x, positions, precision)
+    size = cache["k"].shape[1]
+    slot = length % size if cfg.sliding_window else length
+    cache = {
+        "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, 1),
+        "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, 1),
+    }
+    # For SWA the ring buffer holds the last `window` tokens; attending
+    # over all valid slots with no causal mask within them is equivalent.
+    kv_len = jnp.minimum(length + 1, size)
+    o = attn_mod.attention(q, cache["k"].astype(q.dtype), cache["v"].astype(q.dtype),
+                           causal=False, kv_len=kv_len,
+                           q_chunk=1, kv_chunk=cfg.kv_chunk)
+    o = o.reshape(b, 1, cfg.n_heads * cfg.head_dim)
+    return C.dense(o, params["o"], precision), cache

@@ -1,0 +1,185 @@
+"""Shared model substrate: norms, rotary embeddings, dense projections,
+parameter initialization with logical sharding axes.
+
+Parameter trees are plain nested dicts of jnp arrays.  Every init
+function returns ``(params, specs)`` where ``specs`` mirrors the param
+tree with tuples of LOGICAL axis names (resolved to mesh axes by
+repro.dist.sharding.rules).  Activations are annotated through ``lsc``
+(logical sharding constraint), a no-op outside an active mesh context.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# logical sharding context
+
+
+class _ShardingContext(threading.local):
+    def __init__(self):
+        self.rules: dict[str, Any] | None = None
+        self.mesh = None
+
+
+_CTX = _ShardingContext()
+
+
+def set_sharding_context(mesh, rules: dict[str, Any] | None):
+    _CTX.mesh = mesh
+    _CTX.rules = rules
+
+
+def clear_sharding_context():
+    _CTX.mesh = None
+    _CTX.rules = None
+
+
+def logical_to_pspec(axes: tuple[str | None, ...], rules: dict[str, Any],
+                     shape: tuple[int, ...] | None = None, mesh=None):
+    """Resolve logical axis names to a PartitionSpec.
+
+    Robustness rules (needed because one rule set serves 10 archs):
+      * dedup — a mesh axis may appear only once per spec (first wins);
+      * divisibility — when ``shape``+``mesh`` are given, a mesh axis is
+        dropped if it does not divide the dim (e.g. 24 heads on a
+        16-way 'model' axis, 8 Mixtral experts on 16-way EP).
+    """
+    from jax.sharding import PartitionSpec
+    used: set = set()
+    out = []
+    for i, a in enumerate(axes):
+        mx = rules.get(a) if a else None
+        if mx is None:
+            out.append(None)
+            continue
+        parts = mx if isinstance(mx, tuple) else (mx,)
+        parts = tuple(p for p in parts if p not in used)
+        if not parts:
+            out.append(None)
+            continue
+        if shape is not None and mesh is not None:
+            size = 1
+            for p in parts:
+                size *= mesh.shape[p]
+            if shape[i] % size != 0:
+                out.append(None)
+                continue
+        used.update(parts)
+        out.append(parts if len(parts) > 1 else parts[0])
+    return PartitionSpec(*out)
+
+
+def lsc(x: Array, *axes: str | None) -> Array:
+    """Logical sharding constraint on an activation (no-op w/o context)."""
+    if _CTX.mesh is None or _CTX.rules is None:
+        return x
+    from jax.sharding import NamedSharding
+    spec = logical_to_pspec(axes[:x.ndim], _CTX.rules, x.shape, _CTX.mesh)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_CTX.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+
+
+def dense_init(key, d_in: int, d_out: int, axes: tuple[str | None, str | None],
+               bias: bool = False, dtype=jnp.float32, scale: float | None = None):
+    std = scale if scale is not None else (1.0 / d_in) ** 0.5
+    w = jax.random.normal(key, (d_in, d_out), dtype) * std
+    p = {"w": w}
+    s = {"w": axes}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+        s["b"] = (axes[1],)
+    return p, s
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    w = jax.random.normal(key, (vocab, d), dtype) * (1.0 / d) ** 0.5
+    return {"w": w}, {"w": ("vocab", "embed")}
+
+
+def norm_init(d: int, kind: str = "rmsnorm", dtype=jnp.float32):
+    p = {"scale": jnp.ones((d,), dtype)}
+    s = {"scale": ("embed",)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+        s["bias"] = ("embed",)
+    return p, s
+
+
+# ---------------------------------------------------------------------------
+# ops
+
+
+def rmsnorm(x: Array, params, eps: float = 1e-6) -> Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x: Array, params, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32)
+    if "bias" in params:
+        y = y + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def norm(x: Array, params, kind: str = "rmsnorm", eps: float = 1e-6) -> Array:
+    return rmsnorm(x, params, eps) if kind == "rmsnorm" else layernorm(x, params, eps)
+
+
+def dense(x: Array, params, precision: str = "bf16") -> Array:
+    """Projection with OXBNN precision dispatch (see kernels/ops.py)."""
+    y = kops.bnn_dense(x, params["w"], precision=precision)
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> Array:
+    """Inverse frequencies for rotary embedding (half of head_dim)."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """Rotary position embedding.
+
+    x: (..., T, H, Dh); positions: broadcastable to (..., T) int32.
+    Rotate pairs (x[2i], x[2i+1]).
+    """
+    dh = x.shape[-1]
+    inv = rope_frequencies(dh, theta)                       # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv    # (..., T, Dh/2)
+    cos = jnp.cos(ang)[..., None, :]                        # (..., T, 1, Dh/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def gelu(x: Array) -> Array:
+    return jax.nn.gelu(x, approximate=True)
+
+
+ACTIVATIONS = {
+    "silu": jax.nn.silu,
+    "gelu": gelu,
+    "relu": jax.nn.relu,
+}

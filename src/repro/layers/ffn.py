@@ -1,0 +1,42 @@
+"""Feed-forward blocks: GLU variants (SwiGLU/GeGLU) and plain MLPs,
+with OXBNN precision dispatch on every projection."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import common as C
+
+Array = jax.Array
+
+
+def init(key, d_model: int, d_ff: int, kind: str = "swiglu", dtype=jnp.float32,
+         axes=("embed", "mlp")):
+    ks = jax.random.split(key, 3)
+    p, s = {}, {}
+    if kind in ("swiglu", "geglu"):
+        p["gate"], s["gate"] = C.dense_init(ks[0], d_model, d_ff, axes, dtype=dtype)
+        p["up"], s["up"] = C.dense_init(ks[1], d_model, d_ff, axes, dtype=dtype)
+    else:  # plain mlp (gelu/relu)
+        p["up"], s["up"] = C.dense_init(ks[1], d_model, d_ff, axes, dtype=dtype)
+    p["down"], s["down"] = C.dense_init(ks[2], d_ff, d_model,
+                                        (axes[1], axes[0]), dtype=dtype)
+    return p, s
+
+
+def forward(params, x: Array, kind: str = "swiglu",
+            precision: str = "bf16") -> Array:
+    if kind == "swiglu":
+        h = jax.nn.silu(C.dense(x, params["gate"], precision)) * \
+            C.dense(x, params["up"], precision)
+    elif kind == "geglu":
+        h = C.gelu(C.dense(x, params["gate"], precision)) * \
+            C.dense(x, params["up"], precision)
+    elif kind == "gelu":
+        h = C.gelu(C.dense(x, params["up"], precision))
+    elif kind == "relu":
+        h = jax.nn.relu(C.dense(x, params["up"], precision))
+    else:
+        raise ValueError(kind)
+    h = C.lsc(h, "batch", None, "mlp")
+    return C.dense(h, params["down"], precision)

@@ -1,0 +1,230 @@
+"""Mamba-2 block (state-space duality / SSD, arXiv:2405.21060).
+
+Chunked SSD algorithm: the sequence is split into chunks of length L;
+within a chunk the recurrence is computed as a masked quadratic form
+(duality with attention), chunk boundary states are combined with an
+associative scan, and the inter-chunk contribution is added back.
+Single-token decode is the O(1) recurrence on the cached state — this is
+what makes the ``long_500k`` cell tractable for SSM/hybrid archs.
+
+Shapes per block: x (B, T, d_model); d_inner = expand * d_model;
+heads H = d_inner / headdim P; state N = d_state; groups G (=1 here).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import common as C
+
+Array = jax.Array
+
+
+def init(key, cfg, dtype=jnp.float32):
+    """cfg fields: d_model, ssm_expand, ssm_headdim, ssm_state, ssm_conv."""
+    d_inner = cfg.ssm_expand * cfg.d_model
+    h = d_inner // cfg.ssm_headdim
+    g = 1
+    conv_ch = d_inner + 2 * g * cfg.ssm_state
+    d_in_proj = 2 * d_inner + 2 * g * cfg.ssm_state + h
+    ks = jax.random.split(key, 4)
+    p, s = {}, {}
+    p["in_proj"], s["in_proj"] = C.dense_init(
+        ks[0], cfg.d_model, d_in_proj, ("embed", "ssm_inner"), dtype=dtype)
+    p["conv_w"] = jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch), dtype) * 0.2
+    s["conv_w"] = (None, "ssm_inner")
+    p["conv_b"] = jnp.zeros((conv_ch,), dtype)
+    s["conv_b"] = ("ssm_inner",)
+    p["A_log"] = jnp.log(jnp.linspace(1.0, 16.0, h).astype(dtype))
+    s["A_log"] = (None,)
+    p["D"] = jnp.ones((h,), dtype)
+    s["D"] = (None,)
+    p["dt_bias"] = jnp.zeros((h,), dtype)
+    s["dt_bias"] = (None,)
+    p["norm"], s["norm"] = C.norm_init(d_inner, "rmsnorm", dtype)
+    s["norm"] = {"scale": ("ssm_inner",)}
+    p["out_proj"], s["out_proj"] = C.dense_init(
+        ks[3], d_inner, cfg.d_model, ("ssm_inner", "embed"), dtype=dtype)
+    return p, s
+
+
+def _split_proj(cfg, zxbcdt):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    h = d_inner // cfg.ssm_headdim
+    g, n = 1, cfg.ssm_state
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, d_inner + d_inner + 2 * g * n], axis=-1)
+    return z, xbc, dt, d_inner, h, g, n
+
+
+def _causal_conv(xbc: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv1d: xbc (B, T, C), w (k, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + xbc.shape[1], :] * w[i][None, None, :] for i in range(k))
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def forward(params, cfg, x: Array, *, chunk: int = 256,
+            precision: str = "bf16") -> Array:
+    """Full-sequence SSD (train/prefill)."""
+    bsz, t, _ = x.shape
+    zxbcdt = C.dense(x, params["in_proj"], precision)
+    z, xbc, dt, d_inner, h, g, n = _split_proj(cfg, zxbcdt)
+    p = cfg.ssm_headdim
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xs, b_, c_ = jnp.split(xbc, [d_inner, d_inner + g * n], axis=-1)
+    xs = xs.reshape(bsz, t, h, p)
+    b_ = b_.reshape(bsz, t, g, n)
+    c_ = c_.reshape(bsz, t, g, n)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"][None, None])
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))        # (H,)
+    log_decay = dt * a[None, None, :]                         # (B,T,H) = log a_t
+
+    # pad T to chunk multiple
+    lpad = (-t) % chunk
+    if lpad:
+        xs = jnp.pad(xs, ((0, 0), (0, lpad), (0, 0), (0, 0)))
+        b_ = jnp.pad(b_, ((0, 0), (0, lpad), (0, 0), (0, 0)))
+        c_ = jnp.pad(c_, ((0, 0), (0, lpad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, lpad), (0, 0)))
+        log_decay = jnp.pad(log_decay, ((0, 0), (0, lpad), (0, 0)))
+    tp = t + lpad
+    nc = tp // chunk
+
+    def ch(v, *trail):
+        return v.reshape(bsz, nc, chunk, *trail)
+
+    xs_c = ch(xs, h, p)
+    b_c = ch(b_, g, n)
+    c_c = ch(c_, g, n)
+    dt_c = ch(dt, h)
+    ld_c = ch(log_decay, h)
+
+    cum = jnp.cumsum(ld_c, axis=2)                            # (B,nc,L,H)
+    total = cum[:, :, -1]                                     # (B,nc,H)
+
+    # ---- intra-chunk (quadratic / attention-dual form) ----
+    # M[t,s] = (C_t . B_s) * exp(cum_t - cum_s) for s <= t
+    cb = jnp.einsum("bclgn,bcsgn->bclsg", c_c, b_c)           # (B,nc,L,L,G)
+    cb = cb[..., 0]                                           # G=1 -> (B,nc,L,L)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]       # (B,nc,L,L,H)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask BEFORE exp: for s > t the exponent is positive and can
+    # overflow; exp(inf)*0 would poison the backward pass with NaNs.
+    seg = jnp.where(causal[None, None, :, :, None], seg, -1e30)
+    decay = jnp.exp(seg)
+    m = cb[..., None] * decay                                 # (B,nc,L,L,H)
+    xdt = xs_c * dt_c[..., None]                              # (B,nc,L,H,P)
+    y_intra = jnp.einsum("bclsh,bcshp->bclhp", m, xdt)
+
+    # ---- chunk boundary states ----
+    # S_c = sum_s exp(total - cum_s) * dt_s * B_s (x) x_s   -> (B,nc,H,N,P)
+    w_s = jnp.exp(total[:, :, None, :] - cum) * dt_c          # (B,nc,L,H)
+    states = jnp.einsum("bclh,bclgn,bclhp->bchnp",
+                        w_s, b_c, xs_c)                       # g=1 folded
+
+    # ---- inter-chunk associative scan over (decay, state) ----
+    decay_c = jnp.exp(total)                                  # (B,nc,H)
+
+    def combine(left, right):
+        dl, sl = left
+        dr, sr = right
+        return dl * dr, sr + sl * dr[..., None, None]
+
+    dprod, sprefix = jax.lax.associative_scan(combine, (decay_c, states), axis=1)
+    # state entering chunk c = prefix of chunks < c
+    h_prev = jnp.concatenate(
+        [jnp.zeros_like(sprefix[:, :1]), sprefix[:, :-1]], axis=1)
+
+    # ---- inter-chunk contribution ----
+    y_inter = jnp.einsum("bclgn,bchnp->bclhp", c_c, h_prev) * \
+        jnp.exp(cum)[..., None]
+
+    y = (y_intra + y_inter).reshape(bsz, tp, h, p)[:, :t]
+    y = y + xs[:, :t] * params["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(bsz, t, d_inner).astype(x.dtype)
+    y = C.rmsnorm(y, params["norm"]) * jax.nn.silu(z)
+    return C.dense(y, params["out_proj"], precision)
+
+
+def init_cache(cfg, batch: int, dtype=jnp.float32):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    h = d_inner // cfg.ssm_headdim
+    g = 1
+    conv_ch = d_inner + 2 * g * cfg.ssm_state
+    return {
+        "h": jnp.zeros((batch, h, cfg.ssm_state, cfg.ssm_headdim), dtype),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+    }
+
+
+def decode_step(params, cfg, x: Array, cache, *,
+                precision: str = "bf16") -> tuple[Array, dict]:
+    """O(1) single-token step. x: (B, 1, d_model)."""
+    bsz = x.shape[0]
+    zxbcdt = C.dense(x, params["in_proj"], precision)
+    z, xbc, dt, d_inner, h, g, n = _split_proj(cfg, zxbcdt)
+    p = cfg.ssm_headdim
+
+    # conv with cached history
+    hist = jnp.concatenate([cache["conv"], xbc], axis=1)       # (B, k, C)
+    w = params["conv_w"]
+    out = jnp.sum(hist * w[None], axis=1, keepdims=True)
+    xbc1 = jax.nn.silu(out + params["conv_b"][None, None])
+    new_conv = hist[:, 1:]
+
+    xs, b_, c_ = jnp.split(xbc1, [d_inner, d_inner + g * n], axis=-1)
+    xs = xs.reshape(bsz, h, p)
+    b_ = b_.reshape(bsz, n)
+    c_ = c_.reshape(bsz, n)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"][None])
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * a[None])                              # (B,H)
+
+    hstate = cache["h"].astype(jnp.float32)
+    upd = jnp.einsum("bh,bn,bhp->bhnp", dt, b_.astype(jnp.float32),
+                     xs.astype(jnp.float32))
+    hstate = hstate * decay[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", c_.astype(jnp.float32), hstate)
+    y = y + xs.astype(jnp.float32) * params["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(bsz, 1, d_inner).astype(x.dtype)
+    y = C.rmsnorm(y, params["norm"]) * jax.nn.silu(z)
+    out = C.dense(y, params["out_proj"], precision)
+    return out, {"h": hstate.astype(cache["h"].dtype), "conv": new_conv}
+
+
+def forward_reference(params, cfg, x: Array) -> Array:
+    """O(T) sequential reference (tests): plain recurrence."""
+    bsz, t, _ = x.shape
+    zxbcdt = C.dense(x, params["in_proj"], "bf16")
+    z, xbc, dt, d_inner, h, g, n = _split_proj(cfg, zxbcdt)
+    p = cfg.ssm_headdim
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xs, b_, c_ = jnp.split(xbc, [d_inner, d_inner + g * n], axis=-1)
+    xs = xs.reshape(bsz, t, h, p)
+    b_ = b_.reshape(bsz, t, n)
+    c_ = c_.reshape(bsz, t, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"][None, None])
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * a[None, None])                        # (B,T,H)
+
+    def step(hs, inp):
+        xt, bt, ct, dct, dtt = inp
+        upd = jnp.einsum("bh,bn,bhp->bhnp", dtt, bt, xt)
+        hs = hs * dct[:, :, None, None] + upd
+        yt = jnp.einsum("bn,bhnp->bhp", ct, hs)
+        return hs, yt
+
+    h0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (
+        xs.transpose(1, 0, 2, 3).astype(jnp.float32),
+        b_.transpose(1, 0, 2).astype(jnp.float32),
+        c_.transpose(1, 0, 2).astype(jnp.float32),
+        decay.transpose(1, 0, 2),
+        dt.transpose(1, 0, 2)))
+    y = ys.transpose(1, 0, 2, 3)
+    y = y + xs.astype(jnp.float32) * params["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(bsz, t, d_inner).astype(x.dtype)
+    y = C.rmsnorm(y, params["norm"]) * jax.nn.silu(z)
+    return C.dense(y, params["out_proj"], "bf16")

@@ -1,0 +1,114 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV are compressed to a low-rank latent c_kv (kv_lora_rank) plus a shared
+decoupled-RoPE key k_rope; per-head K/V are re-expanded with up
+projections.  The KV cache stores only (c_kv, k_rope) — the MLA memory
+win — and attention itself reuses the chunked flash implementation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import attention as attn_mod
+from repro.layers import common as C
+
+Array = jax.Array
+
+
+def init(key, cfg, dtype=jnp.float32):
+    """cfg fields: d_model, n_heads, kv_lora_rank, qk_nope_head_dim,
+    qk_rope_head_dim, v_head_dim, (optional) q_lora_rank."""
+    ks = jax.random.split(key, 6)
+    h = cfg.n_heads
+    qk_head = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    p, s = {}, {}
+    if cfg.q_lora_rank:
+        p["q_down"], s["q_down"] = C.dense_init(ks[0], cfg.d_model, cfg.q_lora_rank,
+                                                ("embed", "q_lora"), dtype=dtype)
+        p["q_up"], s["q_up"] = C.dense_init(ks[1], cfg.q_lora_rank, h * qk_head,
+                                            ("q_lora", "heads"), dtype=dtype)
+    else:
+        p["q"], s["q"] = C.dense_init(ks[0], cfg.d_model, h * qk_head,
+                                      ("embed", "heads"), dtype=dtype)
+    p["kv_down"], s["kv_down"] = C.dense_init(
+        ks[2], cfg.d_model, cfg.kv_lora_rank + cfg.qk_rope_head_dim,
+        ("embed", None), dtype=dtype)
+    p["k_up"], s["k_up"] = C.dense_init(
+        ks[3], cfg.kv_lora_rank, h * cfg.qk_nope_head_dim,
+        ("kv_lora", "heads"), dtype=dtype)
+    p["v_up"], s["v_up"] = C.dense_init(
+        ks[4], cfg.kv_lora_rank, h * cfg.v_head_dim,
+        ("kv_lora", "heads"), dtype=dtype)
+    p["o"], s["o"] = C.dense_init(ks[5], h * cfg.v_head_dim, cfg.d_model,
+                                  ("heads", "embed"), dtype=dtype)
+    return p, s
+
+
+def _project(params, cfg, x, positions, precision):
+    """Produce q (with rope), c_kv latent, k_rope for tokens x."""
+    b, t, _ = x.shape
+    h = cfg.n_heads
+    if cfg.q_lora_rank:
+        q = C.dense(C.dense(x, params["q_down"], precision), params["q_up"], precision)
+    else:
+        q = C.dense(x, params["q"], precision)
+    q = q.reshape(b, t, h, cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    q_nope = q[..., :cfg.qk_nope_head_dim]
+    q_rope = C.apply_rope(q[..., cfg.qk_nope_head_dim:], positions, cfg.rope_theta)
+
+    kv = C.dense(x, params["kv_down"], precision)
+    c_kv = kv[..., :cfg.kv_lora_rank]
+    k_rope = kv[..., cfg.kv_lora_rank:]  # (b, t, qk_rope_head_dim), shared head
+    k_rope = C.apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _expand_kv(params, cfg, c_kv, k_rope):
+    """Re-expand latent to per-head K (nope+rope) and V."""
+    b, s, _ = c_kv.shape
+    h = cfg.n_heads
+    k_nope = C.dense(c_kv, params["k_up"], "bf16").reshape(
+        b, s, h, cfg.qk_nope_head_dim)
+    v = C.dense(c_kv, params["v_up"], "bf16").reshape(b, s, h, cfg.v_head_dim)
+    k_rope_b = jnp.broadcast_to(k_rope[:, :, None, :],
+                                (b, s, h, cfg.qk_rope_head_dim))
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    return k, v
+
+
+def forward(params, cfg, x: Array, positions: Array, *,
+            precision: str = "bf16", window=None) -> Array:
+    """Full-sequence (train/prefill) MLA block."""
+    b, t, _ = x.shape
+    q_nope, q_rope, c_kv, k_rope = _project(params, cfg, x, positions, precision)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k, v = _expand_kv(params, cfg, c_kv, k_rope)
+    o = attn_mod.attention(q, k, v, causal=True, window=window)
+    o = o.reshape(b, t, cfg.n_heads * cfg.v_head_dim)
+    return C.dense(o, params["o"], precision)
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.float32):
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
+    }
+
+
+def decode_step(params, cfg, x: Array, cache, length: Array, *,
+                precision: str = "bf16") -> tuple[Array, dict]:
+    """One-token decode. x: (B, 1, d_model); cache holds compressed KV."""
+    b = x.shape[0]
+    positions = jnp.full((b, 1), length, jnp.int32)
+    q_nope, q_rope, c_kv, k_rope = _project(params, cfg, x, positions, precision)
+    cache = {
+        "c_kv": jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv, length, 1),
+        "k_rope": jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], k_rope, length, 1),
+    }
+    k, v = _expand_kv(params, cfg, cache["c_kv"], cache["k_rope"])
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    o = attn_mod.attention(q, k, v, causal=True, q_offset=length,
+                           kv_len=length + 1)
+    o = o.reshape(b, 1, cfg.n_heads * cfg.v_head_dim)
+    return C.dense(o, params["o"], precision), cache

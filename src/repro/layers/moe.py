@@ -1,0 +1,209 @@
+"""Token-choice top-k Mixture-of-Experts with sort-free static dispatch.
+
+Dispatch is built with a cumulative-position scatter (no global sort):
+for every (token, choice) slot we compute its arrival position within
+its expert via a cumsum over the token axis, drop slots beyond the
+static capacity C, and scatter token indices into an (E, C) gather
+table.  Expert FFNs then run as single batched einsums over stacked
+expert weights — MXU-friendly and expert-parallel (E sharded on the
+"model"/"expert" mesh axis).  Combine is a weighted scatter-add.
+
+This is the standard scalable JAX MoE dataflow (a la GShard/Mixtral
+implementations) with static shapes everywhere, so it lowers cleanly in
+the 512-device dry-run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.binarize import ste_sign
+from repro.layers import common as C
+
+Array = jax.Array
+
+
+def init(key, d_model: int, d_ff: int, n_experts: int, kind: str = "swiglu",
+         n_shared: int = 0, shared_d_ff: int | None = None, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    std = (1.0 / d_model) ** 0.5
+    p = {"router": {"w": jax.random.normal(ks[0], (d_model, n_experts), dtype) * std}}
+    s = {"router": {"w": ("embed", None)}}
+
+    def expert_stack(k, din, dout):
+        return jax.random.normal(k, (n_experts, din, dout), dtype) * (1.0 / din) ** 0.5
+
+    if kind in ("swiglu", "geglu"):
+        p["gate"] = expert_stack(ks[1], d_model, d_ff)
+        s["gate"] = ("experts", "embed", "mlp")
+    p["up"] = expert_stack(ks[2], d_model, d_ff)
+    s["up"] = ("experts", "embed", "mlp")
+    p["down"] = expert_stack(ks[3], d_ff, d_model)
+    s["down"] = ("experts", "mlp", "embed")
+    if n_shared > 0:
+        from repro.layers import ffn
+        p["shared"], s["shared"] = ffn.init(
+            ks[4], d_model, (shared_d_ff or d_ff) * n_shared, kind, dtype=dtype)
+    return p, s
+
+
+def _expert_matmul(x: Array, w: Array, precision: str,
+                   reduce_bf16: bool = False) -> Array:
+    """x: (E, C, din), w: (E, din, dout)."""
+    if precision in ("bf16",):
+        if reduce_bf16:
+            # bf16 partial sums: when the contraction dim is TP-sharded,
+            # the cross-chip all-reduce moves bf16 instead of the f32
+            # accumulator (2x fewer bytes). Local accumulation precision
+            # drops to bf16 — acceptable at d_ff/16-length partials,
+            # flagged per-arch (EXPERIMENTS §Perf).
+            return jnp.einsum("ecd,edf->ecf", x, w.astype(x.dtype),
+                              preferred_element_type=x.dtype)
+        return jnp.einsum("ecd,edf->ecf", x, w.astype(x.dtype))
+    if precision == "bnn_train":
+        alpha = jnp.mean(jnp.abs(w), axis=1, keepdims=True)  # (E,1,dout)
+        y = jnp.einsum("ecd,edf->ecf", ste_sign(x), ste_sign(w))
+        return (y * alpha).astype(x.dtype)
+    if precision == "bnn":
+        from repro.core import packing, xnor
+        s = x.shape[-1]
+        ip = packing.pack_pm1(x, axis=-1)                  # (E, C, Kw)
+        wp = jnp.swapaxes(packing.pack_pm1(w, axis=1), 1, 2)  # (E, dout, Kw)
+        z = jax.vmap(lambda a, b: xnor.xnor_matmul_packed(a, b, s))(ip, wp)
+        alpha = jnp.mean(jnp.abs(w), axis=1)               # (E, dout)
+        return ((2 * z - s).astype(jnp.float32) * alpha[:, None, :]).astype(x.dtype)
+    raise ValueError(precision)
+
+
+def route(x2d: Array, router_w: Array, top_k: int):
+    """Returns (weights (T,k), experts (T,k), aux_loss scalar)."""
+    logits = jnp.einsum("td,de->te", x2d.astype(jnp.float32), router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    topk_w, topk_e = jax.lax.top_k(probs, top_k)
+    topk_w = topk_w / jnp.maximum(jnp.sum(topk_w, axis=-1, keepdims=True), 1e-9)
+    # Switch-style load-balance aux loss
+    e = router_w.shape[-1]
+    density = jnp.mean(jax.nn.one_hot(topk_e[:, 0], e), axis=0)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(density * mean_prob)
+    return topk_w, topk_e, aux
+
+
+def dispatch_tables(topk_e: Array, n_experts: int, capacity: int):
+    """Sort-free dispatch: (token_table (E*C,), valid (E*C,), slot_of (T*k,))."""
+    tk = topk_e.size
+    flat_e = topk_e.reshape(-1)                                   # (T*k,)
+    onehot = (flat_e[:, None] == jnp.arange(n_experts)[None]).astype(jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - onehot                     # arrivals before me
+    pos_in_e = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    keep = pos_in_e < capacity
+    slot = jnp.where(keep, flat_e * capacity + pos_in_e, n_experts * capacity)
+    token_idx = jnp.arange(tk) // topk_e.shape[-1]
+    # one extra slot swallows dropped tokens
+    table = jnp.zeros((n_experts * capacity + 1,), jnp.int32).at[slot].set(token_idx)
+    valid = jnp.zeros((n_experts * capacity + 1,), jnp.bool_).at[slot].set(keep)
+    return table[:-1], valid[:-1], slot
+
+
+def forward(params, x: Array, *, top_k: int, kind: str = "swiglu",
+            capacity_factor: float = 1.25, precision: str = "bf16",
+            min_capacity: int = 4, dispatch_groups: int = 1,
+            reduce_bf16: bool = False):
+    """x: (B, T, d) -> (y, aux_loss).
+
+    dispatch_groups > 1 performs routing/dispatch/combine independently
+    within G token groups (G chosen = the data-parallel degree).  With
+    the group dim sharded on 'data', every gather/scatter/cumsum in the
+    dispatch is SHARD-LOCAL — the all-gather of the full token array
+    that a flat global dispatch induces under SPMD disappears, and the
+    only cross-chip traffic left is the expert-parallel all-to-all (when
+    E is sharded) or the TP reduction (when it is not).  This is the
+    'MoE dispatch locality' optimization recorded in EXPERIMENTS.md
+    §Perf; dispatch_groups=1 reproduces the paper-faithful global
+    dispatch baseline.  Capacity is per-group, so results are identical
+    up to capacity-drop boundaries (property-tested).
+    """
+    b, t, d = x.shape
+    n_tok = b * t
+    e = params["router"]["w"].shape[-1]
+    if dispatch_groups == 0:   # auto: match the data-parallel degree so
+        # the sharded group dim divides exactly (16 on one pod, 32 on two)
+        dispatch_groups = 1
+        if C._CTX.mesh is not None and C._CTX.rules is not None:
+            mx = C._CTX.rules.get("batch")
+            parts = mx if isinstance(mx, tuple) else (mx,) if mx else ()
+            dp = 1
+            for p in parts:
+                dp *= C._CTX.mesh.shape[p]
+            dispatch_groups = dp
+    g = dispatch_groups if dispatch_groups and n_tok % dispatch_groups == 0 \
+        else 1
+    tg = n_tok // g
+    cap = max(min_capacity, int(capacity_factor * tg * top_k / e))
+
+    x3d = x.reshape(g, tg, d)
+    x3d = C.lsc(x3d, "batch", None, None)
+
+    def group_dispatch(xg):
+        topk_w, topk_e, aux = route(xg, params["router"]["w"], top_k)
+        table, valid, slot = dispatch_tables(topk_e, e, cap)
+        xe = xg[table].reshape(e, cap, d)
+        xe = xe * valid.reshape(e, cap, 1).astype(xe.dtype)
+        return xe, (topk_w, slot, aux)
+
+    xe, (topk_w, slot, aux) = jax.vmap(group_dispatch)(x3d)  # (G,E,C,d)
+    xe = C.lsc(xe, "batch", "experts", None, None)
+    aux = jnp.mean(aux)
+
+    def emm(v, w):
+        return jax.vmap(
+            lambda vv: _expert_matmul(vv, w, precision, reduce_bf16))(v)
+
+    if kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if kind == "swiglu" else C.gelu
+        h = act(emm(xe, params["gate"])) * emm(xe, params["up"])
+    else:
+        h = C.gelu(emm(xe, params["up"]))
+    h = C.lsc(h, "batch", "experts", None, "mlp")
+    ye = emm(h, params["down"])                               # (G,E,C,d)
+    ye = C.lsc(ye, "batch", "experts", None, None)
+
+    def group_combine(ye_g, w_g, slot_g):
+        ye_flat = ye_g.reshape(e * cap, d)
+        token_idx = jnp.arange(tg * top_k) // top_k
+        gathered = ye_flat[jnp.clip(slot_g, 0, e * cap - 1)]
+        keep = (slot_g < e * cap).astype(ye_g.dtype)
+        return jnp.zeros((tg, d), ye_g.dtype).at[token_idx].add(
+            gathered * (w_g.reshape(-1).astype(ye_g.dtype) * keep)[:, None])
+
+    y3d = jax.vmap(group_combine)(ye, topk_w, slot)           # (G,tg,d)
+    y2d = y3d.reshape(n_tok, d)
+
+    if "shared" in params:
+        from repro.layers import ffn
+        y2d = y2d + ffn.forward(params["shared"], x.reshape(n_tok, d), kind,
+                                precision)
+    return y2d.reshape(b, t, d).astype(x.dtype), aux
+
+
+def forward_dense_reference(params, x: Array, *, top_k: int,
+                            kind: str = "swiglu") -> Array:
+    """O(E*T) reference: every expert computes every token (tests only)."""
+    b, t, d = x.shape
+    x2d = x.reshape(b * t, d)
+    topk_w, topk_e, _ = route(x2d, params["router"]["w"], top_k)
+    e = params["router"]["w"].shape[-1]
+    act = jax.nn.silu if kind == "swiglu" else C.gelu
+    if kind in ("swiglu", "geglu"):
+        h = act(jnp.einsum("td,edf->etf", x2d, params["gate"])) * \
+            jnp.einsum("td,edf->etf", x2d, params["up"])
+    else:
+        h = C.gelu(jnp.einsum("td,edf->etf", x2d, params["up"]))
+    ye = jnp.einsum("etf,efd->etd", h, params["down"])            # (E, T, d)
+    gate = jnp.zeros((b * t, e), ye.dtype)
+    gate = jax.vmap(lambda g, ei, wi: g.at[ei].add(wi))(gate, topk_e, topk_w.astype(ye.dtype))
+    y2d = jnp.einsum("te,etd->td", gate, ye)
+    if "shared" in params:
+        from repro.layers import ffn
+        y2d = y2d + ffn.forward(params["shared"], x2d, kind, "bf16")
+    return y2d.reshape(b, t, d).astype(x.dtype)

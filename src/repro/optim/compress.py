@@ -1,0 +1,65 @@
+"""Gradient compression: int8 quantized reduction with error feedback.
+
+Distributed-optimization trick for the cross-pod (DCN) gradient
+all-reduce: gradients are quantized to int8 with a per-tensor scale
+before crossing the slow link, and the quantization residual is carried
+into the next step (error feedback), which keeps the long-run update
+unbiased (Karimireddy et al., 2019).  4x fewer bytes on the 'pod' axis
+collective — the dominant multi-pod cost in the §Roofline table.
+
+``wire_bytes`` reports the compressed vs raw traffic so the roofline
+benchmark can quantify the saving.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def init_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quantize(x: Array) -> tuple[Array, Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: Array, scale: Array) -> Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress(grads, error_state):
+    """Returns (wire_tree with {"q","scale"} leaves, new_error_state)."""
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = _quantize(corrected)
+        return {"q": q, "scale": s, "_err": corrected - _dequantize(q, s)}
+
+    packed = jax.tree.map(one, grads, error_state)
+    is_cell = lambda x: isinstance(x, dict) and "q" in x and "_err" in x
+    wire = jax.tree.map(lambda c: {"q": c["q"], "scale": c["scale"]},
+                        packed, is_leaf=is_cell)
+    new_err = jax.tree.map(lambda c: c["_err"], packed, is_leaf=is_cell)
+    return wire, new_err
+
+
+def decompress(wire):
+    is_cell = lambda x: isinstance(x, dict) and "q" in x and "scale" in x
+    return jax.tree.map(lambda c: _dequantize(c["q"], c["scale"]),
+                        wire, is_leaf=is_cell)
+
+
+def roundtrip(grads, error_state):
+    """Simulate the wire round-trip: (grads_hat, new_error_state)."""
+    wire, new_err = compress(grads, error_state)
+    return decompress(wire), new_err
+
+
+def wire_bytes(params) -> dict:
+    raw = sum(p.size * 4 for p in jax.tree.leaves(params))
+    comp = sum(p.size * 1 + 4 for p in jax.tree.leaves(params))
+    return {"raw_fp32": raw, "compressed_int8": comp, "ratio": raw / comp}

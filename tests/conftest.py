@@ -1,0 +1,15 @@
+import jax
+import pytest
+
+# Smoke tests and benches must see ONE device (the dry-run forces 512 in
+# its own process only).  Assert nothing leaked the XLA flag here.
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _single_device_guard():
+    assert len(jax.devices()) >= 1
+    yield
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

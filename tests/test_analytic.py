@@ -1,0 +1,147 @@
+"""Cross-validate the analytic FLOP model against XLA cost analysis on a
+reduced UNROLLED config (no scans -> cost analysis counts everything),
+and sanity-check the HLO collective trip-count analyzer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import ShapeCell, reduced
+from repro.launch import analytic
+from repro.launch.hlo_analysis import analyze_collectives
+from repro.models import transformer as M
+
+
+def _flops_cost_analysis(fn, *args):
+    compiled = jax.jit(fn).lower(*args).compile()
+    return float(compiled.cost_analysis()["flops"])
+
+
+def test_forward_flops_vs_cost_analysis_dense():
+    """Reduced llama-family, forward pass, loop-free shapes: the analytic
+    model must match XLA within ~15% (XLA counts some non-matmul ops we
+    fold into constants; attention scans are sized below chunk sizes so
+    nothing loops)."""
+    cfg = reduced(configs.get_config("qwen1.5-0.5b")).replace(
+        q_chunk=64, kv_chunk=64, vocab=512)
+    b, t = 2, 16
+    cell = ShapeCell("probe", t, b, "prefill")
+    params, _ = M.init(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jnp.zeros((b, t), jnp.int32)}
+
+    def fwd(p, bt):
+        h, _ = M.hidden_states(p, cfg, bt)
+        head = p["embed"]["w"].T if cfg.tie_embeddings else p["head"]["w"]
+        return jnp.einsum("bd,dv->bv", h[:, -1], head)
+
+    got = _flops_cost_analysis(fwd, params, batch)
+    cm = analytic.cell_model(cfg, cell)
+    # layer scan runs n_layers/period times; reduced config has 2 layers,
+    # 1 period each -> trip 2. Scale cost_analysis by the known trip.
+    n_groups = cfg.n_layers // cfg.scan_period
+    body_flops = got  # includes the body once
+    # reconstruct: measured = head + embed + body(once); analytic fwd =
+    # head + n_layers*layer. Compare per-layer estimates instead:
+    per_layer_analytic = (cm.flops_fwd - 2 * b * cfg.d_model * cfg.vocab) / \
+        cfg.n_layers / cell.tokens
+    # measure two depths to isolate the per-layer cost exactly
+    cfg1 = cfg.replace(n_layers=2)
+    cfg2 = cfg.replace(n_layers=4)
+    p1, _ = M.init(jax.random.PRNGKey(0), cfg1)
+    p2, _ = M.init(jax.random.PRNGKey(0), cfg2)
+
+    def fwd_for(c):
+        def f(p, bt):
+            h, _ = M.hidden_states(p, c, bt)
+            return jnp.sum(h)
+        return f
+
+    f1 = _flops_cost_analysis(fwd_for(cfg1), p1, batch)
+    f2 = _flops_cost_analysis(fwd_for(cfg2), p2, batch)
+    # scan body counted once regardless of depth -> f2 ~= f1 when scanned.
+    # Force unrolled comparison via scan_period == n_layers:
+    cfg1u = cfg1.replace(scan_period=2)
+    cfg2u = cfg2.replace(scan_period=4)
+    p1u, _ = M.init(jax.random.PRNGKey(0), cfg1u)
+    p2u, _ = M.init(jax.random.PRNGKey(0), cfg2u)
+    f1u = _flops_cost_analysis(fwd_for(cfg1u), p1u, batch)
+    f2u = _flops_cost_analysis(fwd_for(cfg2u), p2u, batch)
+    measured_per_layer = (f2u - f1u) / 2 / cell.tokens
+    assert measured_per_layer == pytest.approx(per_layer_analytic, rel=0.2), \
+        (measured_per_layer, per_layer_analytic)
+
+
+def test_model_flops_definitions():
+    cfg = configs.get_config("mixtral-8x7b")
+    cell = ShapeCell("train_4k", 4096, 256, "train")
+    cm = analytic.cell_model(cfg, cell)
+    # active params far below total for a top-2-of-8 MoE
+    assert cm.params_active < 0.45 * cm.params_total
+    # 6*N_active*D
+    assert cm.model_flops == pytest.approx(
+        6.0 * cm.params_active * cell.tokens)
+    # executed > useful (remat + attention + dispatch overheads)
+    assert cm.flops_total > cm.model_flops
+
+
+def test_roofline_terms_shape():
+    cfg = configs.get_config("llama3.2-3b")
+    cell = ShapeCell("train_4k", 4096, 256, "train")
+    cm = analytic.cell_model(cfg, cell)
+    terms = analytic.roofline_terms(cm, coll_bytes_executed=1e9, n_devices=256)
+    assert set(terms) >= {"compute_s", "memory_s", "collective_s",
+                          "dominant", "roofline_fraction"}
+    assert terms["dominant"] in ("compute", "memory", "collective")
+    assert 0 < terms["useful_flops_fraction"] <= 1.0
+
+
+def test_hlo_collective_analyzer_trip_counts():
+    """A scanned all-reduce must be multiplied by the trip count."""
+    hlo = """
+HloModule test
+
+%body.1 (p: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %p = (s32[], f32[4]) parameter(0)
+  %ar = f32[4]{0} all-reduce(%gte), replica_groups={}, to_apply=%add.1
+  ROOT %t = (s32[], f32[4]) tuple(%c, %ar)
+}
+
+%cond.1 (p: (s32[], f32[4])) -> pred[] {
+  %p = (s32[], f32[4]) parameter(0)
+  %limit = s32[] constant(7)
+  ROOT %lt = pred[] compare(%gte, %limit), direction=LT
+}
+
+ENTRY %main (a: f32[4]) -> f32[4] {
+  %a = f32[4] parameter(0)
+  %w = (s32[], f32[4]) while(%init), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"7"}}
+  %ar2 = f32[8]{0} all-gather(%a), dimensions={0}
+  ROOT %out = f32[4] get-tuple-element(%w), index=1
+}
+"""
+    stats = analyze_collectives(hlo)
+    assert stats["all-reduce"]["count"] == 1
+    assert stats["all-reduce"]["bytes_static"] == 16
+    assert stats["all-reduce"]["bytes_executed"] == 7 * 16
+    assert stats["all-gather"]["bytes_executed"] == 32
+    assert stats["total_bytes_executed"] == 7 * 16 + 32
+
+
+def test_dryrun_artifacts_exist_and_pass():
+    """The committed sweep must cover all 40 cells x 2 meshes: 66 ok
+    (33 runnable) + 14 documented skips (7 full-attention long_500k)."""
+    import glob
+    import json
+    import os
+    arts = glob.glob(os.path.join(
+        os.path.dirname(__file__), "..", "experiments", "dryrun", "*.json"))
+    if not arts:
+        pytest.skip("dry-run artifacts not generated in this checkout")
+    ok = skipped = 0
+    for p in arts:
+        d = json.load(open(p))
+        assert d["status"] in ("ok", "skipped"), (p, d.get("error"))
+        ok += d["status"] == "ok"
+        skipped += d["status"] == "skipped"
+    assert ok == 66 and skipped == 14

@@ -1,0 +1,74 @@
+"""Binarized conv2d: packed XNOR path == sign-conv oracle, across
+kernel sizes/strides/padding incl. the paper's S=4608 layer shape."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import conv
+
+CASES = [
+    # (B, H, W, Cin, Cout, k, stride, padding)
+    (2, 8, 8, 3, 8, 3, 1, "SAME"),
+    (1, 10, 10, 4, 5, 3, 2, "SAME"),
+    (2, 7, 9, 2, 3, 1, 1, "VALID"),
+    (1, 5, 5, 8, 4, 5, 1, "VALID"),
+    (1, 4, 4, 512, 16, 3, 1, "SAME"),  # S = 4608, the paper's max
+]
+
+
+@pytest.mark.parametrize("b,h,w_,cin,cout,k,stride,padding", CASES)
+def test_bnn_conv_matches_sign_conv(b, h, w_, cin, cout, k, stride, padding):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(b * 31 + cin))
+    x = jax.random.normal(k1, (b, h, w_, cin))
+    w = jax.random.normal(k2, (k, k, cin, cout))
+    want = conv.reference_sign_conv2d(x, w, stride=stride, padding=padding)
+    for impl in ("xla", "pallas"):
+        got = conv.bnn_conv2d(x, w, stride=stride, padding=padding,
+                              precision="bnn", impl=impl)
+        assert got.shape == want.shape
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want), atol=1e-4), impl
+
+
+def test_bnn_conv_binary_out_is_comparator():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(k1, (1, 6, 6, 4))
+    w = jax.random.normal(k2, (3, 3, 4, 8))
+    s = 3 * 3 * 4
+    dot = conv.bnn_conv2d(x, w, precision="bnn", impl="xla")
+    act = conv.bnn_conv2d(x, w, precision="bnn", impl="xla", binary_out=True)
+    # dot = 2z - S  =>  z > S/2  <=>  dot > 0
+    want = (np.asarray(dot) > 0).astype(np.uint8)
+    assert (np.asarray(act) == want).all()
+
+
+def test_bnn_conv_train_grad():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    x = jax.random.normal(k1, (1, 6, 6, 3))
+    w = jax.random.normal(k2, (3, 3, 3, 4)) * 0.2
+
+    def loss(w):
+        return jnp.sum(conv.bnn_conv2d(x, w, precision="bnn_train") ** 2)
+
+    g = jax.grad(loss)(w)
+    assert np.isfinite(np.asarray(g)).all()
+    assert float(jnp.abs(g).sum()) > 0
+
+
+def test_binarized_cnn_layer_stack():
+    """Two conv layers chained entirely in the binary domain (the
+    paper's inference pipeline): conv -> fused comparator -> conv."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    x = jax.random.normal(ks[0], (1, 8, 8, 3))
+    w1 = jax.random.normal(ks[1], (3, 3, 3, 16))
+    w2 = jax.random.normal(ks[2], (3, 3, 16, 8))
+    a1 = conv.bnn_conv2d(x, w1, precision="bnn", impl="xla", binary_out=True)
+    # comparator output {0,1} feeds the next layer as {-1,+1}
+    a1f = 2.0 * a1.astype(jnp.float32) - 1.0
+    y = conv.bnn_conv2d(a1f, w2, precision="bnn", impl="xla")
+    want1 = (np.asarray(conv.reference_sign_conv2d(x, w1)) > 0)
+    want1f = 2.0 * want1.astype(np.float32) - 1.0
+    want = conv.reference_sign_conv2d(jnp.asarray(want1f), w2)
+    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(want),
+                               atol=1e-4)

