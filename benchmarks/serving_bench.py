@@ -1,0 +1,131 @@
+"""Serving benchmark: continuous batching under Poisson arrivals.
+
+For each arch, an open-loop client submits requests with exponential
+inter-arrival times while the engine steps; reported per arch:
+
+  * wall-clock generated tokens/s
+  * p50 / p99 request latency (arrival -> last token)
+  * max concurrent decode rows (continuous batching actually engaged)
+  * modeled OXBNN accelerator tokens/s (photonic cost model)
+
+Usage (CPU smoke, reduced configs):
+  PYTHONPATH=src python benchmarks/serving_bench.py --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.configs.base import reduced
+from repro.models import transformer as M
+from repro.serving import Engine, EngineConfig
+
+SMOKE_ARCHS = ["bnn-lm-100m", "qwen1.5-0.5b", "llama3.2-3b"]
+
+
+def bench_arch(arch: str, *, smoke: bool, n_requests: int, rate_hz: float,
+               prompt_len: int, gen: int, max_batch: int,
+               precision: str = "bnn", seed: int = 0,
+               accelerator: str = "OXBNN_50") -> dict:
+    cfg = configs.get_config(arch)
+    if smoke:
+        cfg = reduced(cfg)
+    cfg = cfg.replace(precision=precision)
+    params, _ = M.init(jax.random.PRNGKey(seed), cfg)
+
+    max_len = prompt_len + gen
+    bs = max(4, min(16, prompt_len))
+    ecfg = EngineConfig(
+        block_size=bs,
+        num_blocks=1 + max_batch * (-(-max_len // bs) + 1),
+        max_batch=max_batch, prefill_chunk=min(16, prompt_len),
+        max_model_len=max_len, accelerator=accelerator)
+    eng = Engine(params, cfg, ecfg)
+
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_hz, n_requests))
+    prompts = rng.integers(0, cfg.vocab, (n_requests, prompt_len),
+                           dtype=np.int32)
+
+    # warm the jits outside the measured window (compile >> smoke steps):
+    # max_batch concurrent 2-token requests grow the decode batch through
+    # every power-of-two bucket, so no shape compiles mid-measurement
+    warm = [eng.submit(prompts[0], 2) for _ in range(max_batch)]
+    eng.run()
+    for w in warm:
+        eng.requests.pop(w)
+    warm_tokens = eng.stats()["decoded_tokens"]
+
+    pending = list(range(n_requests))
+    submitted: dict[int, float] = {}       # rid -> arrival offset
+    t0 = time.perf_counter()
+    while pending or not eng.scheduler.idle:
+        now = time.perf_counter() - t0
+        while pending and arrivals[pending[0]] <= now:
+            i = pending.pop(0)
+            rid = eng.submit(prompts[i], gen, arrival_s=arrivals[i])
+            submitted[rid] = arrivals[i]
+        if eng.scheduler.idle:
+            if pending:
+                time.sleep(min(arrivals[pending[0]] - now, 0.01))
+            continue
+        eng.step()
+    wall = time.perf_counter() - t0
+
+    lats = sorted((eng.requests[rid].finish_s - t0) - arr
+                  for rid, arr in submitted.items()
+                  if eng.requests[rid].finish_s is not None)
+    st = eng.stats()
+    return {
+        "arch": arch, "requests": n_requests,
+        "tokens_per_s": (st["decoded_tokens"] - warm_tokens) / wall,
+        "p50_latency_s": lats[len(lats) // 2],
+        "p99_latency_s": lats[min(int(0.99 * len(lats)), len(lats) - 1)],
+        "max_concurrent": st["max_concurrent_decode"],
+        "preemptions": st["preemptions"],
+        "modeled_tokens_per_s": st["photonic"]["modeled_tokens_per_s"],
+        "accelerator": st["photonic"]["accelerator"],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced configs, tiny request stream")
+    ap.add_argument("--archs", default=None,
+                    help="comma-separated arch ids")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--rate", type=float, default=None,
+                    help="Poisson arrival rate (req/s)")
+    ap.add_argument("--prompt-len", type=int, default=None)
+    ap.add_argument("--gen", type=int, default=None)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--precision", default="bnn")
+    ap.add_argument("--accelerator", default="OXBNN_50")
+    args = ap.parse_args()
+
+    archs = args.archs.split(",") if args.archs else SMOKE_ARCHS
+    n = args.requests or (6 if args.smoke else 32)
+    rate = args.rate or (4.0 if args.smoke else 2.0)
+    plen = args.prompt_len or (8 if args.smoke else 64)
+    gen = args.gen or (8 if args.smoke else 64)
+
+    print(f"{'arch':<18} {'tok/s':>8} {'p50(s)':>8} {'p99(s)':>8} "
+          f"{'maxconc':>8} {'evict':>6} {'modeled tok/s':>14}")
+    for arch in archs:
+        r = bench_arch(arch, smoke=args.smoke, n_requests=n, rate_hz=rate,
+                       prompt_len=plen, gen=gen, max_batch=args.max_batch,
+                       precision=args.precision,
+                       accelerator=args.accelerator)
+        print(f"{r['arch']:<18} {r['tokens_per_s']:>8.1f} "
+              f"{r['p50_latency_s']:>8.3f} {r['p99_latency_s']:>8.3f} "
+              f"{r['max_concurrent']:>8d} {r['preemptions']:>6d} "
+              f"{r['modeled_tokens_per_s']:>14.0f}")
+
+
+if __name__ == "__main__":
+    main()

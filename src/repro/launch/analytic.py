@@ -99,7 +99,8 @@ def _params(cfg: ArchConfig) -> tuple[float, float]:
     shapes, specs = M.abstract_init(cfg)
 
     total = active = 0.0
-    flat_p = jax.tree.leaves_with_path(shapes)
+    # jax.tree.leaves_with_path only exists from jax 0.4.38
+    flat_p = jax.tree_util.tree_leaves_with_path(shapes)
     for path, leaf in flat_p:
         n = float(np.prod(leaf.shape))
         total += n

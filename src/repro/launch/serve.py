@@ -1,8 +1,16 @@
-"""Serving launcher: batched prefill + decode loop with KV caches.
+"""Serving launcher: thin CLI over the continuous-batching engine.
 
 The OXBNN payoff path: with --precision bnn every projection runs the
-packed XNOR-popcount GEMM (1-bit weights/activations), which is the
-paper's inference mode.
+packed XNOR-popcount GEMM (1-bit weights/activations), the paper's
+inference mode.  Requests flow through repro.serving.Engine — block-
+paged KV cache, chunked prefill interleaved with decode, per-step
+admission — and the photonic cost model reports modeled accelerator
+tokens/s next to wall-clock.
+
+``engine="legacy"`` keeps the original token-by-token batch loop as the
+correctness reference (tests assert the engine reproduces its greedy
+tokens exactly); SSM/MLA/sliding-window archs fall back to it
+automatically.
 
 Usage (CPU smoke):
   PYTHONPATH=src python -m repro.launch.serve --arch bnn-lm-100m --smoke \
@@ -23,12 +31,10 @@ from repro.launch.mesh import make_production_mesh, smoke_mesh
 from repro.dist import sharding as S
 from repro.layers import common as C
 from repro.models import transformer as M
+from repro.serving import Engine, EngineConfig
 
 
-def serve(arch: str, *, smoke: bool = False, multi_pod: bool = False,
-          batch: int = 4, prompt_len: int = 16, gen: int = 16,
-          precision: str | None = None, seed: int = 0,
-          greedy: bool = True):
+def _setup(arch, smoke, multi_pod, precision, seed):
     cfg = configs.get_config(arch)
     if smoke:
         cfg = reduced(cfg)
@@ -37,21 +43,28 @@ def serve(arch: str, *, smoke: bool = False, multi_pod: bool = False,
         mesh = make_production_mesh(multi_pod=multi_pod)
     if precision:
         cfg = cfg.replace(precision=precision)
+    C.set_sharding_context(mesh, S.rules_decode(multi_pod))
+    params, _ = M.init(jax.random.PRNGKey(seed), cfg)
+    return cfg, params
 
-    rules = S.rules_decode(multi_pod)
-    C.set_sharding_context(mesh, rules)
+
+def _prompts(cfg, batch, prompt_len, seed):
+    return jax.random.randint(jax.random.PRNGKey(seed + 1),
+                              (batch, prompt_len), 0, cfg.vocab)
+
+
+def serve_legacy(arch: str, *, smoke: bool = False, multi_pod: bool = False,
+                 batch: int = 4, prompt_len: int = 16, gen: int = 16,
+                 precision: str | None = None, seed: int = 0,
+                 greedy: bool = True):
+    """Reference loop: batched dense-slot cache, token-by-token prefill."""
     try:
-        params, _ = M.init(jax.random.PRNGKey(seed), cfg)
+        cfg, params = _setup(arch, smoke, multi_pod, precision, seed)
         max_len = prompt_len + gen
         caches = M.init_cache(cfg, batch, max_len)
-
-        prompts = jax.random.randint(jax.random.PRNGKey(seed + 1),
-                                     (batch, prompt_len), 0, cfg.vocab)
-
+        prompts = _prompts(cfg, batch, prompt_len, seed)
         decode = jax.jit(lambda p, c, tok, ln: M.decode_step(p, cfg, tok, c, ln))
 
-        # prefill by stepping the decode path token-by-token (correctness
-        # reference; a production server uses the chunked prefill step)
         t0 = time.time()
         tok = prompts[:, :1]
         out_tokens = [tok]
@@ -66,10 +79,56 @@ def serve(arch: str, *, smoke: bool = False, multi_pod: bool = False,
             out_tokens.append(tok)
         seqs = jnp.concatenate(out_tokens, axis=1)
         dt = time.time() - t0
-        tps = batch * (max_len - 1) / dt
-        print(f"[serve] {arch} precision={cfg.precision} batch={batch} "
-              f"tokens/s={tps:.1f}")
+        print(f"[serve:legacy] {arch} precision={cfg.precision} batch={batch} "
+              f"tokens/s={batch * (max_len - 1) / dt:.1f}")
         return np.asarray(seqs)
+    finally:
+        C.clear_sharding_context()
+
+
+def serve(arch: str, *, smoke: bool = False, multi_pod: bool = False,
+          batch: int = 4, prompt_len: int = 16, gen: int = 16,
+          precision: str | None = None, seed: int = 0,
+          greedy: bool = True, engine: str = "paged",
+          block_size: int | None = None, prefill_chunk: int | None = None,
+          accelerator: str = "OXBNN_50", verbose: bool = True):
+    """Serve ``batch`` synthetic requests; returns (batch, prompt+gen)
+    token ids (prompt prefix included, matching the legacy loop)."""
+    cfg = configs.get_config(arch)
+    if smoke:
+        cfg = reduced(cfg)
+    if engine == "legacy" or not M.paged_compatible(cfg):
+        if engine != "legacy":
+            print(f"[serve] {arch}: not paged-compatible, legacy fallback")
+        return serve_legacy(arch, smoke=smoke, multi_pod=multi_pod,
+                            batch=batch, prompt_len=prompt_len, gen=gen,
+                            precision=precision, seed=seed, greedy=greedy)
+    try:
+        cfg, params = _setup(arch, smoke, multi_pod, precision, seed)
+        max_len = prompt_len + gen
+        bs = block_size or max(8, min(32, prompt_len))
+        ecfg = EngineConfig(
+            block_size=bs,
+            num_blocks=1 + batch * (-(-max_len // bs) + 1),
+            max_batch=max(batch, 1),
+            prefill_chunk=prefill_chunk or min(16, prompt_len),
+            max_model_len=max_len,
+            accelerator=accelerator)
+        eng = Engine(params, cfg, ecfg)
+        prompts = np.asarray(_prompts(cfg, batch, prompt_len, seed))
+        rids = [eng.submit(prompts[b], gen) for b in range(batch)]
+        out = eng.run()
+        stats = eng.stats()
+        if verbose:
+            ph = stats["photonic"]
+            print(f"[serve] {arch} precision={cfg.precision} batch={batch} "
+                  f"tokens/s={stats['tokens_per_s']:.1f} "
+                  f"steps={stats['steps']} "
+                  f"max_concurrent={stats['max_concurrent_decode']}")
+            print(f"[serve] modeled {ph['accelerator']}: "
+                  f"{ph['modeled_tokens_per_s']:.0f} tokens/s "
+                  f"(bottleneck: {ph['bottleneck_stage']})")
+        return np.stack([out[r] for r in rids])
     finally:
         C.clear_sharding_context()
 
@@ -83,10 +142,16 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--precision", default=None)
+    ap.add_argument("--engine", default="paged", choices=["paged", "legacy"])
+    ap.add_argument("--block-size", type=int, default=None)
+    ap.add_argument("--prefill-chunk", type=int, default=None)
+    ap.add_argument("--accelerator", default="OXBNN_50")
     args = ap.parse_args()
     serve(args.arch, smoke=args.smoke, multi_pod=args.multi_pod,
           batch=args.batch, prompt_len=args.prompt_len, gen=args.gen,
-          precision=args.precision)
+          precision=args.precision, engine=args.engine,
+          block_size=args.block_size, prefill_chunk=args.prefill_chunk,
+          accelerator=args.accelerator)
 
 
 if __name__ == "__main__":

@@ -23,7 +23,8 @@ NEG_INF = -1e30
 def _chunk_attend(q, k, v, q_pos, k_pos, causal, window, kv_len):
     """Scores + online-softmax terms for one (q_chunk, kv_chunk) tile.
 
-    q: (B, Tq, H, Dh); k, v: (B, Sk, Hkv, Dh).
+    q: (B, Tq, H, Dh); k, v: (B, Sk, Hkv, Dh); q_pos (B, Tq); k_pos (Sk,);
+    kv_len None, scalar, or (B,) (per-row valid KV length — paged decode).
     Returns (m, l, o) partials: m (B, H, Tq), l (B, H, Tq), o (B, Tq, H, Dh).
     """
     b, tq, h, dh = q.shape
@@ -34,14 +35,15 @@ def _chunk_attend(q, k, v, q_pos, k_pos, causal, window, kv_len):
     kf = k.astype(jnp.float32)
     # (B, Hkv, G, Tq, Sk)
     scores = jnp.einsum("btkgd,bskd->bkgts", qf.reshape(b, tq, hkv, g, dh), kf)
-    mask = jnp.ones((tq, sk), bool)
+    mask = jnp.ones((b, tq, sk), bool)
     if causal:
-        mask &= q_pos[:, None] >= k_pos[None, :]
+        mask &= q_pos[:, :, None] >= k_pos[None, None, :]
     if window is not None and window > 0:
-        mask &= q_pos[:, None] - k_pos[None, :] < window
+        mask &= q_pos[:, :, None] - k_pos[None, None, :] < window
     if kv_len is not None:
-        mask &= (k_pos < kv_len)[None, :]
-    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        kl = jnp.broadcast_to(jnp.asarray(kv_len), (b,))
+        mask &= k_pos[None, None, :] < kl[:, None, None]
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
     m = jnp.max(scores, axis=-1)                        # (B,Hkv,G,Tq)
     p = jnp.exp(scores - m[..., None])
     # zero out fully-masked rows (m == NEG_INF)
@@ -75,7 +77,10 @@ def attention(q: Array, k: Array, v: Array, *,
     """Chunked flash-style attention.
 
     q_offset: absolute position of q[0] (for decode: cache length).
+      Scalar, or (B,) for per-row offsets (continuous-batching decode /
+      chunked prefill where every sequence sits at a different length).
     kv_len: optional dynamic valid length of k/v (decode with cache).
+      Scalar or (B,) per-row lengths.
     """
     b, t, h, dh = q.shape
     s = k.shape[1]
@@ -90,6 +95,7 @@ def attention(q: Array, k: Array, v: Array, *,
     kp = jnp.pad(k, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
     vp = jnp.pad(v, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
     eff_len = kv_len if kv_len is not None else s
+    q_off = jnp.broadcast_to(jnp.asarray(q_offset), (b,))
 
     nq = tp // q_chunk
     nk = sp // kv_chunk
@@ -98,7 +104,7 @@ def attention(q: Array, k: Array, v: Array, *,
     k_pos_base = jnp.arange(kv_chunk)
 
     def one_q_chunk(qc, qi):
-        q_pos = q_pos_base + qi * q_chunk + q_offset
+        q_pos = q_pos_base[None, :] + qi * q_chunk + q_off[:, None]
 
         def kv_step(carry, ki):
             # dynamic_slice from the original (B,S,...) layout — a
@@ -143,16 +149,18 @@ def attention_reference(q, k, v, *, causal=True, window=None, q_offset=0,
     kf = jnp.repeat(k, g, axis=2).astype(jnp.float32)
     vf = jnp.repeat(v, g, axis=2).astype(jnp.float32)
     scores = jnp.einsum("bthd,bshd->bhts", q.astype(jnp.float32) * dh ** -0.5, kf)
-    q_pos = jnp.arange(t) + q_offset
+    q_pos = jnp.arange(t)[None] + jnp.broadcast_to(jnp.asarray(q_offset),
+                                                   (b,))[:, None]
     k_pos = jnp.arange(s)
-    mask = jnp.ones((t, s), bool)
+    mask = jnp.ones((b, t, s), bool)
     if causal:
-        mask &= q_pos[:, None] >= k_pos[None, :]
+        mask &= q_pos[:, :, None] >= k_pos[None, None, :]
     if window is not None and window > 0:
-        mask &= q_pos[:, None] - k_pos[None, :] < window
+        mask &= q_pos[:, :, None] - k_pos[None, None, :] < window
     if kv_len is not None:
-        mask &= (k_pos < kv_len)[None, :]
-    scores = jnp.where(mask[None, None], scores, NEG_INF)
+        kl = jnp.broadcast_to(jnp.asarray(kv_len), (b,))
+        mask &= k_pos[None, None, :] < kl[:, None, None]
+    scores = jnp.where(mask[:, None], scores, NEG_INF)
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhts,bshd->bthd", p, vf)
     return out.astype(q.dtype)

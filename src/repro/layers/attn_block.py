@@ -65,6 +65,105 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.float32):
     }
 
 
+# ---------------------------------------------------------------------------
+# block-paged KV cache (serving engine; see repro/serving/)
+#
+# The per-layer cache is a pool of fixed-size token blocks
+# k/v: (num_blocks, block_size, Hkv, Dh).  A sequence owns a list of
+# physical block ids; its (B, max_blocks) block table maps logical block
+# index -> physical id.  Block 0 is a reserved scratch block: writes for
+# padded/inactive rows are redirected there and never read back (every
+# read is masked by the per-row kv_len).
+
+
+def init_paged_cache(cfg, num_blocks: int, block_size: int,
+                     dtype=jnp.float32):
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((num_blocks, block_size, hkv, dh), dtype),
+        "v": jnp.zeros((num_blocks, block_size, hkv, dh), dtype),
+    }
+
+
+def gather_blocks(pool: Array, block_table: Array) -> Array:
+    """(num_blocks, bs, hkv, dh) x (B, max_blocks) -> (B, max_blocks*bs,
+    hkv, dh) — a sequence's KV, logically contiguous.  Slots past the
+    owned blocks point at scratch block 0; callers mask by kv_len."""
+    nb, bs, hkv, dh = pool.shape
+    b, mb = block_table.shape
+    return pool[block_table].reshape(b, mb * bs, hkv, dh)
+
+
+def scatter_blocks(pool: Array, block_table: Array, positions: Array,
+                   values: Array, valid: Array) -> Array:
+    """Write per-row token values into the paged pool.
+
+    positions (B, C) absolute token positions; values (B, C, hkv, dh);
+    valid (B, C) bool — invalid writes are redirected to scratch block 0.
+    """
+    nb, bs, hkv, dh = pool.shape
+    mb = block_table.shape[1]
+    bidx = jnp.clip(positions // bs, 0, mb - 1)                 # (B, C)
+    phys = jnp.take_along_axis(block_table, bidx, axis=1)       # (B, C)
+    phys = jnp.where(valid, phys, 0)
+    offs = jnp.where(valid, positions % bs, 0)
+    return pool.at[phys.reshape(-1), offs.reshape(-1)].set(
+        values.reshape(-1, hkv, dh).astype(pool.dtype))
+
+
+def paged_decode_step(params, cfg, x: Array, cache, block_table: Array,
+                      lengths: Array, *, precision: str = "bf16",
+                      active: Array | None = None) -> tuple[Array, dict]:
+    """One-token decode against the paged pool with PER-ROW lengths.
+
+    x (B, 1, d); block_table (B, max_blocks); lengths (B,) current
+    per-sequence cache fill; active (B,) bool masks padded batch slots.
+    """
+    b = x.shape[0]
+    positions = lengths[:, None]                                 # (B, 1)
+    q, k, v = _qkv(params, cfg, x, positions, precision)
+    valid = (jnp.ones((b, 1), bool) if active is None
+             else active[:, None])
+    cache = {
+        "k": scatter_blocks(cache["k"], block_table, positions, k, valid),
+        "v": scatter_blocks(cache["v"], block_table, positions, v, valid),
+    }
+    keys = gather_blocks(cache["k"], block_table)
+    vals = gather_blocks(cache["v"], block_table)
+    o = attn_mod.attention(q, keys.astype(q.dtype), vals.astype(q.dtype),
+                           causal=False, kv_len=lengths + 1,
+                           q_chunk=1, kv_chunk=cfg.kv_chunk)
+    o = o.reshape(b, 1, cfg.n_heads * cfg.head_dim)
+    return C.dense(o, params["o"], precision), cache
+
+
+def prefill_chunk(params, cfg, x: Array, cache, block_table: Array,
+                  lengths: Array, n_valid: Array, *,
+                  precision: str = "bf16") -> tuple[Array, dict]:
+    """Chunked prefill: C tokens per row appended at per-row offsets.
+
+    x (B, C, d); lengths (B,) tokens already cached; n_valid (B,) how
+    many of the C chunk positions are real (the rest are padding).
+    Causal within the chunk, full attention to the cached prefix.
+    """
+    b, ch, _ = x.shape
+    positions = lengths[:, None] + jnp.arange(ch, dtype=jnp.int32)[None, :]
+    q, k, v = _qkv(params, cfg, x, positions, precision)
+    valid = jnp.arange(ch, dtype=jnp.int32)[None, :] < n_valid[:, None]
+    cache = {
+        "k": scatter_blocks(cache["k"], block_table, positions, k, valid),
+        "v": scatter_blocks(cache["v"], block_table, positions, v, valid),
+    }
+    keys = gather_blocks(cache["k"], block_table)
+    vals = gather_blocks(cache["v"], block_table)
+    o = attn_mod.attention(q, keys.astype(q.dtype), vals.astype(q.dtype),
+                           causal=True, q_offset=lengths,
+                           kv_len=lengths + n_valid,
+                           q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    o = o.reshape(b, ch, cfg.n_heads * cfg.head_dim)
+    return C.dense(o, params["o"], precision), cache
+
+
 def decode_step(params, cfg, x: Array, cache, length: Array, *,
                 precision: str = "bf16") -> tuple[Array, dict]:
     """One-token decode; cache k/v updated in place at ``length``

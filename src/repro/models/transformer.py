@@ -376,6 +376,111 @@ def cache_specs(cfg: ArchConfig):
     return out
 
 
+# ---------------------------------------------------------------------------
+# block-paged decode / chunked prefill (continuous-batching serving path;
+# see repro/serving/engine.py)
+
+
+def paged_compatible(cfg: ArchConfig) -> bool:
+    """The paged serving path covers full-attention GQA stacks (every
+    assigned dense arch + the paper-native BNN LM).  SSM/MLA mixers keep
+    per-slot recurrent state and sliding windows keep a ring buffer —
+    both incompatible with token-block paging; the engine falls back to
+    the dense-slot loop for those."""
+    return (all(mix == "gqa" for mix, _ in layer_plan(cfg))
+            and cfg.sliding_window is None)
+
+
+def init_paged_cache(cfg: ArchConfig, num_blocks: int, block_size: int,
+                     dtype=jnp.float32):
+    """Flat per-layer list of block pools (layer order == plan order)."""
+    assert paged_compatible(cfg), cfg.name
+    return [attn_block.init_paged_cache(cfg, num_blocks, block_size, dtype)
+            for _ in range(cfg.n_layers)]
+
+
+def _iter_layers(cfg: ArchConfig, params):
+    """Yield (mix, ffn_kind, layer_params) in plan order, unrolling
+    scan-stacked segments (static indexing — paged serving runs the
+    stack unrolled so each layer's pool buffer aliases in place)."""
+    for (kind, plan, n_groups), seg_params in zip(segments(cfg),
+                                                  params["segments"]):
+        if kind == "unroll":
+            for (mix, f), p in zip(plan, seg_params):
+                yield mix, f, p
+        else:
+            for gi in range(n_groups):
+                gp = jax.tree.map(
+                    lambda a: jax.lax.index_in_dim(a, gi, 0, keepdims=False),
+                    seg_params)
+                for li, (mix, f) in enumerate(plan):
+                    yield mix, f, gp[f"l{li}"]
+
+
+def _paged_ffn(params, cfg: ArchConfig, f: str, x, precision):
+    if f == "none":
+        return x
+    h = C.norm(x, params["norm2"], cfg.norm, cfg.norm_eps)
+    if f == "moe":
+        y, _ = moe.forward(params["ffn"], h, top_k=cfg.top_k, kind=cfg.act,
+                           capacity_factor=cfg.capacity_factor,
+                           precision=precision)
+    else:
+        y = ffn.forward(params["ffn"], h, cfg.act, precision)
+    return x + y
+
+
+def paged_decode_step(params, cfg: ArchConfig, tokens: Array, caches,
+                      block_table: Array, lengths: Array,
+                      active: Array | None = None):
+    """One decode token per row against the paged pools.
+
+    tokens (B, 1) int32; block_table (B, max_blocks); lengths (B,)
+    per-row cache fill; active (B,) masks padded batch slots.
+    Returns (logits (B, 1, V), new_caches).
+    """
+    x = params["embed"]["w"][tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    new_caches = []
+    for li, (mix, f, p) in enumerate(_iter_layers(cfg, params)):
+        h = C.norm(x, p["norm1"], cfg.norm, cfg.norm_eps)
+        y, nc = attn_block.paged_decode_step(
+            p["attn"], cfg, h, caches[li], block_table, lengths,
+            precision=cfg.precision, active=active)
+        new_caches.append(nc)
+        x = _paged_ffn(p, cfg, f, x + y, cfg.precision)
+    x = C.norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+    logits = jnp.einsum("btd,dv->btv", x, _head_matrix(params, cfg))
+    return logits, new_caches
+
+
+def prefill_chunk(params, cfg: ArchConfig, tokens: Array, caches,
+                  block_table: Array, lengths: Array, n_valid: Array):
+    """Jitted chunked prefill: append a chunk of C tokens per row.
+
+    tokens (B, C) int32 (padded past n_valid); lengths (B,) tokens
+    already cached; n_valid (B,) real tokens in this chunk.
+    Returns (logits (B, C, V), new_caches) — logits cover every chunk
+    position, so the caller reads position n_valid-1 for the first
+    generated token and can check logit equivalence at all positions.
+    """
+    x = params["embed"]["w"][tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    new_caches = []
+    for li, (mix, f, p) in enumerate(_iter_layers(cfg, params)):
+        h = C.norm(x, p["norm1"], cfg.norm, cfg.norm_eps)
+        y, nc = attn_block.prefill_chunk(
+            p["attn"], cfg, h, caches[li], block_table, lengths, n_valid,
+            precision=cfg.precision)
+        new_caches.append(nc)
+        x = _paged_ffn(p, cfg, f, x + y, cfg.precision)
+    x = C.norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+    logits = jnp.einsum("btd,dv->btv", x, _head_matrix(params, cfg))
+    return logits, new_caches
+
+
 def decode_step(params, cfg: ArchConfig, tokens: Array, caches, length, *,
                 unroll: bool | None = None):
     """tokens (B, 1) int32; length: scalar int32 current cache fill.

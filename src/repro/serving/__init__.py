@@ -1,0 +1,8 @@
+"""Continuous-batching BNN inference engine (paged KV cache +
+photonic-aware scheduling).  See docs/serving.md."""
+from repro.serving.block_cache import BlockAllocator, BlockKVCache  # noqa: F401
+from repro.serving.cost_model import PhotonicCostModel, gemm_specs  # noqa: F401
+from repro.serving.engine import Engine, EngineConfig               # noqa: F401
+from repro.serving.request import Request, State                    # noqa: F401
+from repro.serving.scheduler import (                               # noqa: F401
+    Scheduler, SchedulerConfig, StepPlan)

@@ -1,0 +1,100 @@
+"""Block-paged KV cache: free-list allocator + device pools.
+
+The device-side pools live in ``models/transformer.init_paged_cache``
+(one (num_blocks, block_size, hkv, dh) pool per layer, k and v); this
+module owns the host-side bookkeeping: which physical blocks belong to
+which sequence, and the padded (B, max_blocks) block tables the jitted
+steps consume.  Block 0 is reserved as a scratch block (padded rows and
+masked writes are redirected there), so the allocator hands out ids
+from 1..num_blocks-1.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.models import transformer as M
+
+
+class BlockAllocator:
+    """LIFO free-list over physical block ids 1..num_blocks-1."""
+
+    RESERVED = 1  # block 0 = scratch
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 2:
+            raise ValueError("need at least 2 blocks (one is scratch)")
+        self.num_blocks = num_blocks
+        self._free = list(range(num_blocks - 1, 0, -1))  # pop() -> 1 first
+        self._used: set[int] = set()
+
+    @property
+    def capacity(self) -> int:
+        return self.num_blocks - self.RESERVED
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_used(self) -> int:
+        return len(self._used)
+
+    def alloc(self, n: int) -> list[int] | None:
+        """All-or-nothing allocation of n blocks; None when short."""
+        if n < 0:
+            raise ValueError(n)
+        if n > len(self._free):
+            return None
+        out = [self._free.pop() for _ in range(n)]
+        self._used.update(out)
+        return out
+
+    def free(self, blocks: list[int]):
+        for b in blocks:
+            if b not in self._used:
+                raise ValueError(f"double/foreign free of block {b}")
+            self._used.remove(b)
+            self._free.append(b)
+
+
+class BlockKVCache:
+    """Device pools + allocator + block-table assembly."""
+
+    def __init__(self, cfg, *, num_blocks: int, block_size: int,
+                 max_model_len: int, dtype=np.float32):
+        self.cfg = cfg
+        self.block_size = block_size
+        self.num_blocks = num_blocks
+        self.max_blocks_per_seq = -(-max_model_len // block_size)
+        self.allocator = BlockAllocator(num_blocks)
+        self.pools = M.init_paged_cache(cfg, num_blocks, block_size, dtype)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)
+
+    def ensure_capacity(self, req, n_tokens: int) -> bool:
+        """Grow ``req.blocks`` to cover n_tokens cache slots; False if
+        the pool cannot supply the missing blocks (caller preempts)."""
+        need = self.blocks_for(n_tokens) - len(req.blocks)
+        if need <= 0:
+            return True
+        got = self.allocator.alloc(need)
+        if got is None:
+            return False
+        req.blocks.extend(got)
+        return True
+
+    def release(self, req):
+        if req.blocks:
+            self.allocator.free(req.blocks)
+        req.blocks = []
+
+    def table_rows(self, reqs, batch: int) -> np.ndarray:
+        """Padded (batch, max_blocks_per_seq) block table; padded rows
+        and unowned slots point at scratch block 0."""
+        mb = self.max_blocks_per_seq
+        table = np.zeros((batch, mb), np.int32)
+        for i, r in enumerate(reqs):
+            ids = r.blocks[:mb]
+            table[i, :len(ids)] = ids
+        return table

@@ -1,0 +1,104 @@
+"""Photonic cost-model hook: modeled OXBNN latency for one decode token.
+
+Maps every projection GEMM of one transformer decode step onto the
+paper's XPC mapping (an FC layer: S = fan-in, V = fan-out; see
+photonic/workloads.LayerSpec) and queries the transaction-level
+simulator (photonic/simulator.simulate_layer) for per-GEMM latency.
+The engine reports the resulting modeled accelerator tokens/s next to
+wall-clock tokens/s, so scheduling decisions can be judged against the
+paper's hardware rather than the host CPU/TPU.
+
+The accelerator processes one request at a time (the paper simulates
+batch 1, layers in sequence), so a decode step over B rows is modeled
+as B sequential tokens — continuous batching raises utilization, not
+single-token latency.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.models.transformer import layer_plan
+from repro.photonic import accelerators
+from repro.photonic.simulator import SimKnobs, simulate_layer
+from repro.photonic.workloads import LayerSpec, fc
+
+
+def gemm_specs(cfg) -> list[LayerSpec]:
+    """Per-token GEMMs of one decode step, as photonic FC LayerSpecs."""
+    specs: list[LayerSpec] = []
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    for i, (mix, f) in enumerate(layer_plan(cfg)):
+        if mix == "gqa":
+            specs += [fc(f"l{i}.q", d, h * dh), fc(f"l{i}.k", d, hkv * dh),
+                      fc(f"l{i}.v", d, hkv * dh), fc(f"l{i}.o", h * dh, d)]
+        if f in ("dense", "moe"):
+            if f == "moe":
+                # router + the ACTIVE experts a token actually traverses
+                specs.append(fc(f"l{i}.router", d, cfg.n_experts))
+                ff = cfg.moe_d_ff or cfg.d_ff
+                n_mlps = cfg.top_k + cfg.n_shared_experts
+            else:
+                ff = cfg.d_ff
+                n_mlps = 1
+            for e in range(n_mlps):
+                tag = f"l{i}.e{e}" if f == "moe" else f"l{i}"
+                if cfg.act in ("swiglu", "geglu"):
+                    specs += [fc(f"{tag}.gate", d, ff), fc(f"{tag}.up", d, ff)]
+                else:
+                    specs += [fc(f"{tag}.up", d, ff)]
+                specs.append(fc(f"{tag}.down", ff, d))
+    specs.append(fc("head", d, cfg.vocab))
+    return specs
+
+
+@dataclass(frozen=True)
+class TokenCost:
+    latency_s: float
+    energy_j: float
+    bottleneck: str      # dominant stage across GEMMs (by summed time)
+
+
+class PhotonicCostModel:
+    """Per-layer latencies for one arch on one accelerator config."""
+
+    def __init__(self, cfg, accelerator: str = "OXBNN_50",
+                 knobs: SimKnobs = SimKnobs()):
+        self.cfg = cfg
+        self.acc = accelerators.by_name(accelerator)
+        self.knobs = knobs
+        self.layers = [simulate_layer(self.acc, s, knobs)
+                       for s in gemm_specs(cfg)]
+
+    @property
+    def token_cost(self) -> TokenCost:
+        lat = sum(l.latency_s for l in self.layers)
+        en = sum(l.energy_j for l in self.layers)
+        by_stage: dict[str, float] = {}
+        for l in self.layers:
+            for s in l.stages:
+                by_stage[s.name] = by_stage.get(s.name, 0.0) + s.time_s
+        return TokenCost(lat, en, max(by_stage, key=by_stage.get))
+
+    @property
+    def token_latency_s(self) -> float:
+        return self.token_cost.latency_s
+
+    @property
+    def modeled_tokens_per_s(self) -> float:
+        return 1.0 / self.token_latency_s
+
+    def step_latency_s(self, n_tokens: int) -> float:
+        """Batch-1-sequential accelerator: B rows = B tokens back-to-back."""
+        return n_tokens * self.token_latency_s
+
+    def report(self) -> dict:
+        tc = self.token_cost
+        return {
+            "accelerator": self.acc.name,
+            "arch": self.cfg.name,
+            "token_latency_s": tc.latency_s,
+            "modeled_tokens_per_s": 1.0 / tc.latency_s,
+            "token_energy_j": tc.energy_j,
+            "bottleneck_stage": tc.bottleneck,
+            "n_gemms": len(self.layers),
+        }

@@ -1,0 +1,248 @@
+"""Event-driven continuous-batching inference engine.
+
+One ``Engine.step()`` = one scheduler decision + at most one jitted
+chunked-prefill call + one jitted decode call over every running
+sequence.  Requests are admitted and retired PER STEP, so new traffic
+joins a running batch without draining it (continuous batching).
+
+Compile discipline: the decode batch is padded to power-of-two buckets
+(at most log2(max_batch)+1 shapes) and prefill always runs at the fixed
+(1, prefill_chunk) shape, so steady-state serving never re-jits.  The
+paged pools are donated into every call — XLA updates the KV blocks in
+place instead of double-buffering the whole cache.
+
+With cfg.precision == "bnn" every projection runs the packed
+XNOR-popcount GEMM — the paper's inference mode — and the attached
+PhotonicCostModel reports what the modeled OXBNN accelerator would
+sustain on the same token stream, next to host wall-clock.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as M
+from repro.serving.block_cache import BlockKVCache
+from repro.serving.cost_model import PhotonicCostModel
+from repro.serving.request import Request, State
+from repro.serving.scheduler import Scheduler, SchedulerConfig
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    block_size: int = 16
+    num_blocks: int = 129            # 1 scratch + 128 allocatable
+    max_batch: int = 8               # decode slots (padded to 2^k buckets)
+    prefill_chunk: int = 16
+    max_model_len: int = 256         # prompt + generation bound per request
+    policy: str = "fcfs"             # fcfs | priority
+    max_tokens_in_flight: int = 1 << 30
+    max_batched_tokens: int = 256
+    accelerator: str = "OXBNN_50"    # photonic cost-model target
+
+
+class Engine:
+    def __init__(self, params, cfg, ecfg: EngineConfig = EngineConfig()):
+        if not M.paged_compatible(cfg):
+            raise NotImplementedError(
+                f"{cfg.name}: paged serving needs a full-attention GQA "
+                "stack (use launch.serve legacy mode for SSM/MLA/SWA)")
+        self.params = params
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.cache = BlockKVCache(cfg, num_blocks=ecfg.num_blocks,
+                                  block_size=ecfg.block_size,
+                                  max_model_len=ecfg.max_model_len)
+        self.scheduler = Scheduler(
+            SchedulerConfig(max_batch=ecfg.max_batch,
+                            max_tokens_in_flight=ecfg.max_tokens_in_flight,
+                            max_batched_tokens=ecfg.max_batched_tokens,
+                            prefill_chunk=ecfg.prefill_chunk,
+                            policy=ecfg.policy),
+            self.cache)
+        self.cost_model = PhotonicCostModel(cfg, ecfg.accelerator)
+        self.requests: dict[int, Request] = {}
+        self.step_count = 0
+        self._next_rid = 0
+        self._wall_s = 0.0
+        self._decoded = 0
+        self._prefilled = 0
+        self._max_concurrent = 0
+
+        cfg_ = cfg  # closure constant (static); params/pools stay args
+
+        def _prefill(params, pools, tokens, table, lengths, n_valid):
+            return M.prefill_chunk(params, cfg_, tokens, pools, table,
+                                   lengths, n_valid)
+
+        def _decode(params, pools, tokens, table, lengths, active):
+            logits, pools = M.paged_decode_step(params, cfg_, tokens, pools,
+                                                table, lengths, active)
+            return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), \
+                logits, pools
+
+        self._prefill_fn = jax.jit(_prefill, donate_argnums=(1,))
+        self._decode_fn = jax.jit(_decode, donate_argnums=(1,))
+
+    # ---------------------------------------------------------------- API
+
+    def submit(self, prompt, max_new: int, *, priority: int = 0,
+               arrival_s: float = 0.0) -> int:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size + max_new > self.ecfg.max_model_len:
+            raise ValueError(
+                f"request needs {prompt.size + max_new} tokens > "
+                f"max_model_len={self.ecfg.max_model_len}")
+        if self.cache.blocks_for(prompt.size + max_new) \
+                > self.cache.allocator.capacity:
+            raise ValueError(
+                f"request needs {prompt.size + max_new} tokens of KV > "
+                f"the whole block pool; raise num_blocks")
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid, prompt, max_new, priority=priority,
+                      arrival_s=arrival_s)
+        req.submit_s = time.perf_counter()
+        self.requests[rid] = req
+        self.scheduler.submit(req, self.step_count)
+        return rid
+
+    def step(self) -> bool:
+        """One engine iteration; False when nothing was schedulable."""
+        t0 = time.perf_counter()
+        step = self.step_count
+        plan = self.scheduler.schedule(step)
+        if plan.prefill is not None:
+            self._run_prefill(step, plan.prefill, plan.prefill_tokens)
+        # prefill-side preemption may have requeued planned decode rows
+        decode = [r for r in plan.decode
+                  if r.state == State.DECODE and r in self.scheduler.running]
+        if decode:
+            self._run_decode(step, decode)
+        self.step_count += 1
+        self._wall_s += time.perf_counter() - t0
+        return plan.has_work
+
+    def run(self) -> dict[int, np.ndarray]:
+        """Drive until every submitted request finished; returns
+        rid -> full token sequence (prompt + generated)."""
+        while not self.scheduler.idle:
+            if not self.step():
+                stuck = [r.rid for r in self.scheduler.queue]
+                raise RuntimeError(
+                    f"unschedulable requests {stuck}: prompt/generation "
+                    "exceeds the block pool — raise num_blocks")
+        return {rid: r.full_sequence() for rid, r in self.requests.items()
+                if r.state == State.FINISHED}
+
+    # ------------------------------------------------------------ internals
+
+    def _run_prefill(self, step: int, req: Request, chunk: int):
+        if not self.scheduler.grow_or_preempt(step, req, req.pos + chunk):
+            return                     # req itself was preempted
+        cp = self.ecfg.prefill_chunk   # fixed padded shape (no re-jit)
+        tokens = np.zeros((1, cp), np.int32)
+        tokens[0, :chunk] = req.prompt[req.pos:req.pos + chunk]
+        table = self.cache.table_rows([req], 1)
+        logits, pools = self._prefill_fn(
+            self.params, self.cache.pools, jnp.asarray(tokens),
+            jnp.asarray(table), jnp.asarray([req.pos], jnp.int32),
+            jnp.asarray([chunk], jnp.int32))
+        self.cache.pools = pools
+        req.pos += chunk
+        self._prefilled += chunk
+        self.scheduler._ev(step, "prefill", req.rid, tokens=chunk,
+                           pos=req.pos)
+        if req.pos == req.prompt_len:
+            tok = int(jnp.argmax(logits[0, chunk - 1]))
+            req.out.append(tok)
+            req.state = State.DECODE
+            req.first_token_step = step
+            req.first_token_s = time.perf_counter()
+            self._decoded += 1
+            self.scheduler._ev(step, "first_token", req.rid)
+            if req.done:
+                self.scheduler.finish(step, req)
+                req.finish_s = time.perf_counter()
+
+    @staticmethod
+    def _bucket(n: int) -> int:
+        b = 1
+        while b < n:
+            b <<= 1
+        return b
+
+    def _run_decode(self, step: int, reqs: list[Request]):
+        ready: list[Request] = []
+        for r in reqs:
+            if r not in self.scheduler.running or r.state != State.DECODE:
+                continue
+            if self.scheduler.grow_or_preempt(step, r, r.pos + 1):
+                ready.append(r)
+        # a later grow may have preempted an earlier 'ready' row
+        ready = [r for r in ready
+                 if r in self.scheduler.running and r.state == State.DECODE]
+        if not ready:
+            return
+        bucket = min(self._bucket(len(ready)), self.ecfg.max_batch)
+        tokens = np.zeros((bucket, 1), np.int32)
+        lengths = np.zeros(bucket, np.int32)
+        active = np.zeros(bucket, bool)
+        for i, r in enumerate(ready):
+            tokens[i, 0] = r.last_token
+            lengths[i] = r.pos
+            active[i] = True
+        table = self.cache.table_rows(ready, bucket)
+        next_tok, _, pools = self._decode_fn(
+            self.params, self.cache.pools, jnp.asarray(tokens),
+            jnp.asarray(table), jnp.asarray(lengths), jnp.asarray(active))
+        self.cache.pools = pools
+        next_tok = np.asarray(next_tok)
+        self._max_concurrent = max(self._max_concurrent, len(ready))
+        self.scheduler._ev(step, "decode", None,
+                           rids=[r.rid for r in ready], batch=bucket)
+        now = time.perf_counter()
+        for i, r in enumerate(ready):
+            r.pos += 1
+            r.out.append(int(next_tok[i]))
+            self._decoded += 1
+            if r.done:
+                self.scheduler.finish(step, r)
+                r.finish_s = now
+
+    # -------------------------------------------------------------- stats
+
+    def stats(self) -> dict:
+        finished = [r for r in self.requests.values()
+                    if r.state == State.FINISHED]
+        lat = sorted(r.finish_s - r.submit_s for r in finished
+                     if r.finish_s is not None and r.submit_s is not None)
+
+        def pct(p):
+            if not lat:
+                return float("nan")
+            return lat[min(int(p / 100 * len(lat)), len(lat) - 1)]
+
+        total = self._decoded + self._prefilled
+        return {
+            "steps": self.step_count,
+            "finished": len(finished),
+            "decoded_tokens": self._decoded,
+            "prefill_tokens": self._prefilled,
+            "wall_s": self._wall_s,
+            "tokens_per_s": (self._decoded / self._wall_s
+                             if self._wall_s else float("nan")),
+            "p50_latency_s": pct(50),
+            "p99_latency_s": pct(99),
+            "max_concurrent_decode": self._max_concurrent,
+            "preemptions": sum(r.preemptions for r in self.requests.values()),
+            "photonic": {
+                **self.cost_model.report(),
+                "modeled_wall_s": self.cost_model.step_latency_s(total),
+                "modeled_tokens_per_s": self.cost_model.modeled_tokens_per_s,
+            },
+        }

@@ -1,0 +1,75 @@
+"""Request lifecycle for the continuous-batching engine.
+
+A request moves QUEUED -> PREFILL -> DECODE -> FINISHED; preemption
+(block-pool pressure) sends it back to QUEUED with its progress
+discarded (recompute-on-resume, the usual paged-KV preemption policy).
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+class State(enum.Enum):
+    QUEUED = "queued"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    FINISHED = "finished"
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (prompt_len,) int32
+    max_new: int
+    priority: int = 0                  # higher = scheduled first
+    arrival_s: float = 0.0             # bench-relative arrival time
+
+    # runtime (owned by the scheduler/engine)
+    state: State = State.QUEUED
+    pos: int = 0                       # tokens written to the KV cache
+    out: list[int] = field(default_factory=list)
+    blocks: list[int] = field(default_factory=list)
+    slot: int | None = None
+    preemptions: int = 0
+    # step/time marks for latency accounting
+    submit_step: int | None = None
+    admit_step: int | None = None
+    first_token_step: int | None = None
+    finish_step: int | None = None
+    submit_s: float | None = None
+    first_token_s: float | None = None
+    finish_s: float | None = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def last_token(self) -> int:
+        """Token to feed the next decode step."""
+        return int(self.out[-1]) if self.out else int(self.prompt[-1])
+
+    @property
+    def done(self) -> bool:
+        return len(self.out) >= self.max_new
+
+    @property
+    def total_tokens(self) -> int:
+        """KV footprint if run to completion (admission budget)."""
+        return self.prompt_len + self.max_new
+
+    def reset_for_requeue(self):
+        """Preemption discards cache + progress; tokens are recomputed."""
+        self.state = State.QUEUED
+        self.pos = 0
+        self.out.clear()
+        self.blocks = []
+        self.slot = None
+        self.preemptions += 1
+
+    def full_sequence(self) -> np.ndarray:
+        return np.concatenate(
+            [self.prompt, np.asarray(self.out, np.int32)])

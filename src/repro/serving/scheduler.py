@@ -1,0 +1,169 @@
+"""Continuous-batching scheduler: admission, chunked-prefill/decode
+interleaving, and block-pressure preemption.
+
+Each engine step the scheduler emits a StepPlan:
+  * admit   — queued requests move to running while a batch slot, the
+              token budget, and prompt blocks are all available;
+  * prefill — ONE running request advances by one prompt chunk (chunk
+              size capped so prefill tokens + decode rows stay under
+              ``max_batched_tokens`` — decode latency is protected from
+              long prompts, the standard chunked-prefill contract);
+  * decode  — every running request past its prompt decodes one token.
+
+Policies: "fcfs" (arrival order) or "priority" (higher first, FCFS
+within a class).  When the block pool runs dry the lowest-priority /
+youngest running request is preempted: blocks freed, progress dropped,
+request requeued (recompute-on-resume).
+
+Every action appends a trace event — tests assert continuous batching
+(mid-stream admission, concurrent decode) on this trace.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.serving.block_cache import BlockKVCache
+from repro.serving.request import Request, State
+
+
+@dataclass(frozen=True)
+class SchedulerConfig:
+    max_batch: int = 8                # concurrent running requests
+    max_tokens_in_flight: int = 1 << 30   # KV-footprint admission budget
+    max_batched_tokens: int = 256     # per-step compute budget
+    prefill_chunk: int = 16
+    policy: str = "fcfs"              # fcfs | priority
+
+
+@dataclass
+class StepPlan:
+    admitted: list[Request] = field(default_factory=list)
+    prefill: Request | None = None
+    prefill_tokens: int = 0
+    decode: list[Request] = field(default_factory=list)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.admitted or self.prefill or self.decode)
+
+
+class Scheduler:
+    def __init__(self, cfg: SchedulerConfig, cache: BlockKVCache):
+        self.cfg = cfg
+        self.cache = cache
+        self.queue: list[Request] = []
+        self.running: list[Request] = []
+        self.trace: list[dict] = []
+        self._order = 0
+
+    # ------------------------------------------------------------- events
+
+    def _ev(self, step: int, event: str, rid=None, **extra):
+        self.trace.append({"step": step, "event": event, "rid": rid, **extra})
+
+    # ------------------------------------------------------------- submit
+
+    def submit(self, req: Request, step: int):
+        req.submit_step = step
+        req._order = self._order  # tie-break for policy sorts
+        self._order += 1
+        self.queue.append(req)
+        self._ev(step, "submit", req.rid, prompt_len=req.prompt_len,
+                 max_new=req.max_new, priority=req.priority)
+
+    def _queue_order(self) -> list[Request]:
+        if self.cfg.policy == "priority":
+            return sorted(self.queue, key=lambda r: (-r.priority, r._order))
+        return sorted(self.queue, key=lambda r: r._order)
+
+    # ----------------------------------------------------------- admission
+
+    def tokens_in_flight(self) -> int:
+        return sum(r.total_tokens for r in self.running)
+
+    def _admit(self, step: int, plan: StepPlan):
+        for req in self._queue_order():
+            if len(self.running) >= self.cfg.max_batch:
+                self._ev(step, "defer", req.rid, reason="no_slot")
+                break
+            if (self.tokens_in_flight() + req.total_tokens
+                    > self.cfg.max_tokens_in_flight):
+                self._ev(step, "defer", req.rid, reason="token_budget")
+                break
+            blocks = self.cache.allocator.alloc(
+                self.cache.blocks_for(req.prompt_len))
+            if blocks is None:
+                self._ev(step, "defer", req.rid, reason="no_blocks")
+                break
+            req.blocks = blocks
+            req.state = State.PREFILL
+            req.pos = 0
+            req.admit_step = step
+            self.queue.remove(req)
+            self.running.append(req)
+            plan.admitted.append(req)
+            self._ev(step, "admit", req.rid,
+                     running=len(self.running), blocks=len(blocks))
+
+    # ---------------------------------------------------------- preemption
+
+    def _preempt_one(self, step: int, protect: Request) -> bool:
+        """Free blocks by requeueing the lowest-priority / youngest
+        running request — possibly ``protect`` itself.  Preempting the
+        youngest (requeued with its ORIGINAL seniority) guarantees the
+        oldest request always keeps its blocks, so two growing requests
+        can never evict each other forever."""
+        victims = sorted(self.running,
+                         key=lambda r: (r.priority, -r._order))
+        victim = victims[0]
+        self.running.remove(victim)
+        self.cache.release(victim)
+        victim.reset_for_requeue()
+        self.queue.append(victim)
+        self._ev(step, "evict", victim.rid, preemptions=victim.preemptions)
+        return victim is not protect
+
+    def grow_or_preempt(self, step: int, req: Request, n_tokens: int) -> bool:
+        """Ensure req's blocks cover n_tokens cache slots, preempting
+        under pool pressure.  False iff req itself got preempted."""
+        while not self.cache.ensure_capacity(req, n_tokens):
+            if not self._preempt_one(step, req):
+                return False
+        return True
+
+    # ------------------------------------------------------------- planning
+
+    def schedule(self, step: int) -> StepPlan:
+        plan = StepPlan()
+        self._admit(step, plan)
+
+        plan.decode = [r for r in self.running if r.state == State.DECODE]
+
+        prefilling = [r for r in self.running if r.state == State.PREFILL]
+        if self.cfg.policy == "priority":
+            prefilling.sort(key=lambda r: (-r.priority, r._order))
+        else:
+            prefilling.sort(key=lambda r: r._order)
+        if prefilling:
+            budget = self.cfg.max_batched_tokens - len(plan.decode)
+            req = prefilling[0]
+            chunk = min(self.cfg.prefill_chunk, req.prompt_len - req.pos,
+                        max(budget, 0))
+            if chunk > 0:
+                plan.prefill = req
+                plan.prefill_tokens = chunk
+        return plan
+
+    # ------------------------------------------------------------- lifecycle
+
+    def finish(self, step: int, req: Request):
+        self.running.remove(req)
+        self.cache.release(req)
+        req.state = State.FINISHED
+        req.finish_step = step
+        self._ev(step, "finish", req.rid, generated=len(req.out),
+                 preemptions=req.preemptions)
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and not self.running

@@ -1,0 +1,74 @@
+"""Minimal stand-in for the `hypothesis` API surface the test suite
+uses, so tier-1 collects and runs on images without hypothesis.
+
+Supports: ``given`` over positional strategies, ``settings``
+register/load profiles (max_examples honored), ``strategies.integers``
+and ``strategies.sampled_from``.  Example generation is deterministic
+per test (seeded by the test name): boundary values first, then
+pseudo-random draws.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+
+class settings:
+    _profiles: dict[str, dict] = {}
+    _active: dict = {"max_examples": 20, "deadline": None}
+
+    def __init__(self, **kw):  # tolerate @settings(...) usage
+        self.kw = kw
+
+    def __call__(self, f):
+        return f
+
+    @classmethod
+    def register_profile(cls, name: str, **kw):
+        cls._profiles[name] = kw
+
+    @classmethod
+    def load_profile(cls, name: str):
+        cls._active = {**cls._active, **cls._profiles.get(name, {})}
+
+
+class _Strategy:
+    def __init__(self, boundary, draw):
+        self.boundary = boundary      # list of edge-case examples
+        self.draw = draw              # rng -> example
+
+    def example_at(self, rng: random.Random, i: int):
+        if i < len(self.boundary):
+            return self.boundary[i]
+        return self.draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        edges = [min_value, max_value]
+        return _Strategy(edges, lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(seq) -> _Strategy:
+        seq = list(seq)
+        return _Strategy(seq[:1], lambda rng: rng.choice(seq))
+
+
+def given(*strats: _Strategy):
+    def deco(f):
+        @functools.wraps(f)
+        def wrapper(*args, **kwargs):
+            rng = random.Random(f.__qualname__)
+            n = int(settings._active.get("max_examples", 20))
+            for i in range(n):
+                vals = [s.example_at(rng, i) for s in strats]
+                f(*args, *vals, **kwargs)
+
+        # strategy-filled params must not look like pytest fixtures
+        params = list(inspect.signature(f).parameters.values())
+        wrapper.__signature__ = inspect.Signature(params[:-len(strats)])
+        del wrapper.__wrapped__
+        return wrapper
+    return deco

@@ -15,7 +15,10 @@ from repro.models import transformer as M
 
 def _flops_cost_analysis(fn, *args):
     compiled = jax.jit(fn).lower(*args).compile()
-    return float(compiled.cost_analysis()["flops"])
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):      # jax <= 0.4.37: one dict per computation
+        ca = ca[0]
+    return float(ca["flops"])
 
 
 def test_forward_flops_vs_cost_analysis_dense():

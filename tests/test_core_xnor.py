@@ -10,7 +10,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # tiny deterministic fallback (tests/_hypothesis_shim.py)
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core import binarize, mapping, oxg, packing, pca, xnor
 

@@ -1,0 +1,246 @@
+"""Continuous-batching engine tests: block allocator invariants,
+scheduler admission/eviction under budgets, chunked-prefill logit
+equivalence, engine-vs-legacy greedy token equivalence, and the
+continuous-batching trace assertion (mid-stream admission with >= 2
+concurrent decodes)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import reduced
+from repro.models import transformer as M
+from repro.serving import (BlockAllocator, BlockKVCache, Engine,
+                           EngineConfig, PhotonicCostModel, Request,
+                           Scheduler, SchedulerConfig, State)
+
+
+@pytest.fixture(scope="module")
+def bnn_cfg():
+    return reduced(configs.get_config("bnn-lm-100m")).replace(precision="bnn")
+
+
+@pytest.fixture(scope="module")
+def bnn_params(bnn_cfg):
+    params, _ = M.init(jax.random.PRNGKey(0), bnn_cfg)
+    return params
+
+
+# ------------------------------------------------------------- allocator
+
+def test_block_allocator_invariants():
+    a = BlockAllocator(9)           # 1 scratch + 8 allocatable
+    assert a.capacity == 8 and a.num_free == 8
+    x = a.alloc(3)
+    y = a.alloc(5)
+    assert a.alloc(1) is None       # exhausted: all-or-nothing
+    ids = x + y
+    assert len(set(ids)) == 8       # distinct
+    assert 0 not in ids             # scratch block never handed out
+    a.free(x)
+    assert a.num_free == 3 and a.num_used == 5
+    with pytest.raises(ValueError):
+        a.free(x)                   # double free detected
+    z = a.alloc(3)                  # freed blocks recycled, no leak
+    assert sorted(z) == sorted(x)
+    a.free(y)
+    a.free(z)
+    assert a.num_free == 8 and a.num_used == 0
+
+
+def test_block_allocator_fragmentation_free_reuse():
+    """Interleaved alloc/free cycles never strand capacity (free list,
+    no contiguity requirement)."""
+    a = BlockAllocator(17)
+    held = []
+    for i in range(50):
+        got = a.alloc(1 + i % 3)
+        assert got is not None
+        held.append(got)
+        if len(held) > 3:
+            a.free(held.pop(0))
+    for h in held:
+        a.free(h)
+    assert a.num_free == a.capacity
+
+
+# ------------------------------------------------------------- scheduler
+
+def _mk_req(rid, prompt_len=8, max_new=8, priority=0):
+    return Request(rid, np.zeros(prompt_len, np.int32), max_new,
+                   priority=priority)
+
+
+def _mk_sched(bnn_cfg, *, num_blocks=64, block_size=4, max_len=32, **kw):
+    cache = BlockKVCache(bnn_cfg, num_blocks=num_blocks,
+                         block_size=block_size, max_model_len=max_len)
+    return Scheduler(SchedulerConfig(**kw), cache), cache
+
+
+def test_scheduler_admits_under_token_budget(bnn_cfg):
+    sched, _ = _mk_sched(bnn_cfg, max_batch=8,
+                         max_tokens_in_flight=40)   # fits 2x(8+8), not 3
+    for rid in range(3):
+        sched.submit(_mk_req(rid), step=0)
+    plan = sched.schedule(0)
+    assert [r.rid for r in plan.admitted] == [0, 1]
+    assert [e["rid"] for e in sched.trace if e["event"] == "defer"] == [2]
+    assert sched.tokens_in_flight() == 32 <= 40
+    # finishing one frees budget; the deferred request admits next step
+    sched.finish(1, sched.running[0])
+    plan = sched.schedule(2)
+    assert [r.rid for r in plan.admitted] == [2]
+
+
+def test_scheduler_priority_policy(bnn_cfg):
+    sched, _ = _mk_sched(bnn_cfg, max_batch=1, policy="priority")
+    sched.submit(_mk_req(0, priority=0), step=0)
+    sched.submit(_mk_req(1, priority=5), step=0)
+    plan = sched.schedule(0)
+    assert [r.rid for r in plan.admitted] == [1]   # higher priority first
+    assert plan.prefill.rid == 1
+
+
+def test_scheduler_chunked_prefill_respects_step_budget(bnn_cfg):
+    sched, _ = _mk_sched(bnn_cfg, max_batch=4, prefill_chunk=16,
+                         max_batched_tokens=6)
+    sched.submit(_mk_req(0, prompt_len=20, max_new=4), step=0)
+    plan = sched.schedule(0)
+    assert plan.prefill_tokens == 6      # capped by the compute budget
+    # with decode rows present the prefill chunk shrinks further
+    sched.running[0].state = State.DECODE
+    sched.submit(_mk_req(1, prompt_len=20, max_new=4), step=1)
+    plan = sched.schedule(1)
+    assert len(plan.decode) == 1
+    assert plan.prefill_tokens == 5      # 6 - 1 decode row
+
+
+def test_scheduler_evicts_youngest_under_block_pressure(bnn_cfg):
+    # 5 allocatable blocks x 4 tokens; two requests needing 4 blocks each
+    sched, cache = _mk_sched(bnn_cfg, num_blocks=6, block_size=4,
+                             max_len=16, max_batch=2)
+    a, b = _mk_req(0, prompt_len=8, max_new=8), _mk_req(1, prompt_len=8,
+                                                        max_new=8)
+    sched.submit(a, step=0)
+    sched.submit(b, step=0)
+    plan = sched.schedule(0)
+    assert len(plan.admitted) == 2       # 2+2 prompt blocks fit
+    # grow A to its full 16 tokens: pool pressure evicts B (younger)
+    assert sched.grow_or_preempt(1, a, 16)
+    assert b.state == State.QUEUED and b.blocks == []
+    assert any(e["event"] == "evict" and e["rid"] == 1
+               for e in sched.trace)
+    assert len(a.blocks) == 4
+    # the oldest request is never the victim of someone else's growth
+    assert a in sched.running
+
+
+# ------------------------------------------------ chunked prefill (jit path)
+
+def test_chunked_prefill_logit_equivalent_to_full_forward(bnn_cfg,
+                                                          bnn_params):
+    """Satellite: the jitted chunked prefill reproduces the step-free
+    reference logits at EVERY prompt position."""
+    cfg, params = bnn_cfg, bnn_params
+    prompt = jax.random.randint(jax.random.PRNGKey(3), (1, 13), 0, cfg.vocab)
+    ref = np.asarray(M.logits_fn(params, cfg, {"tokens": prompt}))
+
+    caches = M.init_paged_cache(cfg, num_blocks=8, block_size=4)
+    table = jnp.array([[1, 2, 3, 4]], jnp.int32)
+    chunk = 5
+    got, pos = [], 0
+    while pos < 13:
+        n = min(chunk, 13 - pos)
+        toks = jnp.zeros((1, chunk), jnp.int32).at[:, :n].set(
+            prompt[:, pos:pos + n])
+        logits, caches = M.prefill_chunk(
+            params, cfg, toks, caches, table,
+            jnp.array([pos], jnp.int32), jnp.array([n], jnp.int32))
+        got.append(np.asarray(logits)[:, :n])
+        pos += n
+    np.testing.assert_allclose(np.concatenate(got, axis=1), ref,
+                               rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------------------------------ engine
+
+def test_engine_matches_legacy_serve_greedy():
+    """The paged engine reproduces the old serve() loop token-for-token
+    (greedy, packed XNOR inference path)."""
+    from repro.launch.serve import serve
+    kw = dict(smoke=True, batch=2, prompt_len=4, gen=4, precision="bnn")
+    got = serve("bnn-lm-100m", engine="paged", verbose=False, **kw)
+    want = serve("bnn-lm-100m", engine="legacy", **kw)
+    assert got.shape == want.shape == (2, 8)
+    np.testing.assert_array_equal(got, want)
+
+
+def _engine(cfg, params, **kw):
+    defaults = dict(block_size=4, num_blocks=33, max_batch=4,
+                    prefill_chunk=4, max_model_len=32)
+    defaults.update(kw)
+    return Engine(params, cfg, EngineConfig(**defaults))
+
+
+def test_continuous_batching_admits_mid_stream(bnn_cfg, bnn_params):
+    """Acceptance: a request submitted while another decodes joins the
+    running batch without draining it — >= 2 concurrent decode rows."""
+    eng = _engine(bnn_cfg, bnn_params)
+    rng = np.random.default_rng(0)
+    ra = eng.submit(rng.integers(0, bnn_cfg.vocab, 4), 16)
+    for _ in range(6):                       # A is mid-generation...
+        eng.step()
+    assert eng.requests[ra].state == State.DECODE
+    rb = eng.submit(rng.integers(0, bnn_cfg.vocab, 4), 8)
+    out = eng.run()
+
+    trace = eng.scheduler.trace
+    admit_b = next(e for e in trace if e["event"] == "admit"
+                   and e["rid"] == rb)
+    assert admit_b["step"] >= 6              # admitted mid-stream
+    both = [e for e in trace if e["event"] == "decode"
+            and set(e["rids"]) >= {ra, rb}]
+    assert both, "A and B never decoded in the same step"
+    assert eng.stats()["max_concurrent_decode"] >= 2
+    assert out[ra].shape == (4 + 16,) and out[rb].shape == (4 + 8,)
+
+
+def test_engine_preemption_recovers(bnn_cfg, bnn_params):
+    """Block-pool pressure evicts the youngest request; it requeues,
+    recomputes, and still finishes with its full generation."""
+    eng = _engine(bnn_cfg, bnn_params, block_size=2, num_blocks=9,
+                  max_batch=2, max_model_len=12)
+    rng = np.random.default_rng(1)
+    ra = eng.submit(rng.integers(0, bnn_cfg.vocab, 4), 8)
+    rb = eng.submit(rng.integers(0, bnn_cfg.vocab, 4), 8)
+    out = eng.run()
+    assert any(e["event"] == "evict" for e in eng.scheduler.trace)
+    assert eng.stats()["preemptions"] >= 1
+    assert out[ra].shape == (12,) and out[rb].shape == (12,)
+    # preemption must not corrupt decoding: rerunning B alone (no
+    # pressure, fresh engine) yields identical tokens
+    eng2 = _engine(bnn_cfg, bnn_params, max_model_len=12)
+    rb2 = eng2.submit(eng.requests[rb].prompt, 8)
+    np.testing.assert_array_equal(eng2.run()[rb2], out[rb])
+
+
+def test_engine_rejects_oversized_request(bnn_cfg, bnn_params):
+    eng = _engine(bnn_cfg, bnn_params, block_size=2, num_blocks=5,
+                  max_model_len=32)
+    with pytest.raises(ValueError):
+        eng.submit(np.zeros(16, np.int32), 16)   # > whole block pool
+
+
+# --------------------------------------------------------- photonic hook
+
+def test_photonic_cost_model_report(bnn_cfg):
+    cm = PhotonicCostModel(bnn_cfg, "OXBNN_50")
+    rep = cm.report()
+    assert rep["token_latency_s"] > 0
+    assert np.isfinite(rep["modeled_tokens_per_s"])
+    # reduced bnn-lm: 2 layers x (q,k,v,o,gate,up,down) + head
+    assert rep["n_gemms"] == 2 * 7 + 1
+    # OXBNN_50 must beat the EO prior at equal area (the paper's claim)
+    slow = PhotonicCostModel(bnn_cfg, "ROBIN_EO")
+    assert cm.token_latency_s < slow.token_latency_s
