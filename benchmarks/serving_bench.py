@@ -1,15 +1,19 @@
 """Serving benchmark: continuous batching under Poisson arrivals.
 
 For each arch, an open-loop client submits requests with exponential
-inter-arrival times while the engine steps; reported per arch:
+inter-arrival times while the engine steps; a fraction of the stream
+(``--shared-frac``) shares one of a few prompt prefixes, the pattern
+prefix caching exploits.  Reported per arch:
 
   * wall-clock generated tokens/s
   * p50 / p99 request latency (arrival -> last token)
   * max concurrent decode rows (continuous batching actually engaged)
-  * modeled OXBNN accelerator tokens/s (photonic cost model)
+  * prefix-cache hit-rate and total swap time (out+in)
+  * modeled OXBNN accelerator tokens/s (photonic cost model, with
+    skipped-prefill credit)
 
 Usage (CPU smoke, reduced configs):
-  PYTHONPATH=src python benchmarks/serving_bench.py --smoke
+  PYTHONPATH=src python benchmarks/serving_bench.py --smoke --prefix-cache
 """
 from __future__ import annotations
 
@@ -27,10 +31,28 @@ from repro.serving import Engine, EngineConfig
 SMOKE_ARCHS = ["bnn-lm-100m", "qwen1.5-0.5b", "llama3.2-3b"]
 
 
+def make_prompts(rng, vocab: int, n_requests: int, prompt_len: int,
+                 shared_frac: float, n_prefixes: int = 2) -> np.ndarray:
+    """Synthetic prompt stream: ``shared_frac`` of requests reuse one
+    of ``n_prefixes`` common prompt heads (half the prompt), the rest
+    are fully random — the access pattern prefix caching targets."""
+    prompts = rng.integers(0, vocab, (n_requests, prompt_len),
+                           dtype=np.int32)
+    half = prompt_len // 2
+    if half and shared_frac > 0:
+        heads = rng.integers(0, vocab, (n_prefixes, half), dtype=np.int32)
+        for i in range(n_requests):
+            if rng.random() < shared_frac:
+                prompts[i, :half] = heads[rng.integers(n_prefixes)]
+    return prompts
+
+
 def bench_arch(arch: str, *, smoke: bool, n_requests: int, rate_hz: float,
                prompt_len: int, gen: int, max_batch: int,
                precision: str = "bnn", seed: int = 0,
-               accelerator: str = "OXBNN_50") -> dict:
+               accelerator: str = "OXBNN_50", prefix_cache: bool = False,
+               preempt_policy: str = "swap",
+               shared_frac: float = 0.5) -> dict:
     cfg = configs.get_config(arch)
     if smoke:
         cfg = reduced(cfg)
@@ -38,27 +60,42 @@ def bench_arch(arch: str, *, smoke: bool, n_requests: int, rate_hz: float,
     params, _ = M.init(jax.random.PRNGKey(seed), cfg)
 
     max_len = prompt_len + gen
-    bs = max(4, min(16, prompt_len))
+    # block size <= half the prompt, so the shared heads make_prompts
+    # writes (prompt_len // 2 tokens) span at least one FULL block —
+    # otherwise the prefix cache has nothing it is allowed to match
+    bs = max(4, min(16, prompt_len // 2))
+    if prefix_cache and prompt_len // 2 < bs:
+        print(f"[bench] warning: prompt_len={prompt_len} gives a "
+              f"{prompt_len // 2}-token shared head < block_size={bs}; "
+              "no full shared block can form, hit% will read 0")
     ecfg = EngineConfig(
         block_size=bs,
         num_blocks=1 + max_batch * (-(-max_len // bs) + 1),
         max_batch=max_batch, prefill_chunk=min(16, prompt_len),
-        max_model_len=max_len, accelerator=accelerator)
+        max_model_len=max_len, accelerator=accelerator,
+        prefix_cache=prefix_cache, preempt_policy=preempt_policy)
     eng = Engine(params, cfg, ecfg)
 
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / rate_hz, n_requests))
-    prompts = rng.integers(0, cfg.vocab, (n_requests, prompt_len),
-                           dtype=np.int32)
+    # same trace whether the cache is on or off — only the engine differs
+    prompts = make_prompts(rng, cfg.vocab, n_requests, prompt_len,
+                           shared_frac)
 
     # warm the jits outside the measured window (compile >> smoke steps):
-    # max_batch concurrent 2-token requests grow the decode batch through
-    # every power-of-two bucket, so no shape compiles mid-measurement
-    warm = [eng.submit(prompts[0], 2) for _ in range(max_batch)]
+    # generations must be long enough (2 + max_batch) that the warm
+    # requests overlap in decode and walk the batch through every
+    # power-of-two bucket — a 2-token request finishes straight off its
+    # prefill logits before a second prefill completes, which would
+    # leave the multi-row decode shapes to compile mid-measurement
+    warm = [eng.submit(prompts[0], 2 + max_batch) for _ in range(max_batch)]
     eng.run()
     for w in warm:
         eng.requests.pop(w)
-    warm_tokens = eng.stats()["decoded_tokens"]
+    # warmup polluted every counter (and cached its prompt): the
+    # engine's lifetime token/wall totals feed the modeled-accelerator
+    # report, so measure the open-loop window from a clean slate
+    eng.reset_stats(flush_prefix=True)
 
     pending = list(range(n_requests))
     submitted: dict[int, float] = {}       # rid -> arrival offset
@@ -80,14 +117,21 @@ def bench_arch(arch: str, *, smoke: bool, n_requests: int, rate_hz: float,
                   for rid, arr in submitted.items()
                   if eng.requests[rid].finish_s is not None)
     st = eng.stats()
+    pc, sw = st["prefix_cache"], st["swap"]
     return {
         "arch": arch, "requests": n_requests,
-        "tokens_per_s": (st["decoded_tokens"] - warm_tokens) / wall,
+        "tokens_per_s": st["decoded_tokens"] / wall,
         "p50_latency_s": lats[len(lats) // 2],
         "p99_latency_s": lats[min(int(0.99 * len(lats)), len(lats) - 1)],
         "max_concurrent": st["max_concurrent_decode"],
         "preemptions": st["preemptions"],
+        "prefix_hit_rate": pc["hit_rate"],
+        "skipped_prefill_tokens": pc["skipped_prefill_tokens"],
+        "swap_s": sw["swap_out_s"] + sw["swap_in_s"],
+        "swaps": sw["swap_outs"] + sw["swap_ins"],
         "modeled_tokens_per_s": st["photonic"]["modeled_tokens_per_s"],
+        "modeled_effective_tokens_per_s":
+            st["photonic"]["modeled_effective_tokens_per_s"],
         "accelerator": st["photonic"]["accelerator"],
     }
 
@@ -106,6 +150,13 @@ def main():
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--precision", default="bnn")
     ap.add_argument("--accelerator", default="OXBNN_50")
+    ap.add_argument("--prefix-cache", default=False,
+                    action=argparse.BooleanOptionalAction,
+                    help="content-addressed prompt prefix reuse")
+    ap.add_argument("--preempt-policy", default="swap",
+                    choices=["swap", "recompute"])
+    ap.add_argument("--shared-frac", type=float, default=0.5,
+                    help="fraction of requests drawing a shared prefix")
     args = ap.parse_args()
 
     archs = args.archs.split(",") if args.archs else SMOKE_ARCHS
@@ -115,16 +166,23 @@ def main():
     gen = args.gen or (8 if args.smoke else 64)
 
     print(f"{'arch':<18} {'tok/s':>8} {'p50(s)':>8} {'p99(s)':>8} "
-          f"{'maxconc':>8} {'evict':>6} {'modeled tok/s':>14}")
+          f"{'maxconc':>8} {'evict':>6} {'hit%':>6} {'swap(ms)':>9} "
+          f"{'modeled tok/s':>14} {'eff tok/s':>12}")
     for arch in archs:
         r = bench_arch(arch, smoke=args.smoke, n_requests=n, rate_hz=rate,
                        prompt_len=plen, gen=gen, max_batch=args.max_batch,
                        precision=args.precision,
-                       accelerator=args.accelerator)
+                       accelerator=args.accelerator,
+                       prefix_cache=args.prefix_cache,
+                       preempt_policy=args.preempt_policy,
+                       shared_frac=args.shared_frac)
         print(f"{r['arch']:<18} {r['tokens_per_s']:>8.1f} "
               f"{r['p50_latency_s']:>8.3f} {r['p99_latency_s']:>8.3f} "
               f"{r['max_concurrent']:>8d} {r['preemptions']:>6d} "
-              f"{r['modeled_tokens_per_s']:>14.0f}")
+              f"{100 * r['prefix_hit_rate']:>6.1f} "
+              f"{1e3 * r['swap_s']:>9.2f} "
+              f"{r['modeled_tokens_per_s']:>14.0f} "
+              f"{r['modeled_effective_tokens_per_s']:>12.0f}")
 
 
 if __name__ == "__main__":

@@ -91,7 +91,8 @@ def serve(arch: str, *, smoke: bool = False, multi_pod: bool = False,
           precision: str | None = None, seed: int = 0,
           greedy: bool = True, engine: str = "paged",
           block_size: int | None = None, prefill_chunk: int | None = None,
-          accelerator: str = "OXBNN_50", verbose: bool = True):
+          accelerator: str = "OXBNN_50", verbose: bool = True,
+          prefix_cache: bool = True, preempt_policy: str = "swap"):
     """Serve ``batch`` synthetic requests; returns (batch, prompt+gen)
     token ids (prompt prefix included, matching the legacy loop)."""
     cfg = configs.get_config(arch)
@@ -113,21 +114,32 @@ def serve(arch: str, *, smoke: bool = False, multi_pod: bool = False,
             max_batch=max(batch, 1),
             prefill_chunk=prefill_chunk or min(16, prompt_len),
             max_model_len=max_len,
-            accelerator=accelerator)
+            accelerator=accelerator,
+            prefix_cache=prefix_cache,
+            preempt_policy=preempt_policy)
         eng = Engine(params, cfg, ecfg)
         prompts = np.asarray(_prompts(cfg, batch, prompt_len, seed))
         rids = [eng.submit(prompts[b], gen) for b in range(batch)]
         out = eng.run()
         stats = eng.stats()
         if verbose:
-            ph = stats["photonic"]
+            ph, pc, sw = (stats["photonic"], stats["prefix_cache"],
+                          stats["swap"])
             print(f"[serve] {arch} precision={cfg.precision} batch={batch} "
                   f"tokens/s={stats['tokens_per_s']:.1f} "
                   f"steps={stats['steps']} "
                   f"max_concurrent={stats['max_concurrent_decode']}")
+            print(f"[serve] prefix-cache "
+                  f"{'on' if pc['enabled'] else 'off'}: "
+                  f"hit-rate={pc['hit_rate']:.2f} "
+                  f"skipped_prefill={pc['skipped_prefill_tokens']} "
+                  f"cow={pc['cow_copies']}; "
+                  f"swaps out/in={sw['swap_outs']}/{sw['swap_ins']}")
             print(f"[serve] modeled {ph['accelerator']}: "
                   f"{ph['modeled_tokens_per_s']:.0f} tokens/s "
-                  f"(bottleneck: {ph['bottleneck_stage']})")
+                  f"(effective {ph['modeled_effective_tokens_per_s']:.0f} "
+                  f"with prefix credit; bottleneck: "
+                  f"{ph['bottleneck_stage']})")
         return np.stack([out[r] for r in rids])
     finally:
         C.clear_sharding_context()
@@ -146,12 +158,19 @@ def main():
     ap.add_argument("--block-size", type=int, default=None)
     ap.add_argument("--prefill-chunk", type=int, default=None)
     ap.add_argument("--accelerator", default="OXBNN_50")
+    ap.add_argument("--prefix-cache", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="content-addressed prompt prefix reuse")
+    ap.add_argument("--preempt-policy", default="swap",
+                    choices=["swap", "recompute"],
+                    help="swap-to-host (default) or recompute-on-resume")
     args = ap.parse_args()
     serve(args.arch, smoke=args.smoke, multi_pod=args.multi_pod,
           batch=args.batch, prompt_len=args.prompt_len, gen=args.gen,
           precision=args.precision, engine=args.engine,
           block_size=args.block_size, prefill_chunk=args.prefill_chunk,
-          accelerator=args.accelerator)
+          accelerator=args.accelerator, prefix_cache=args.prefix_cache,
+          preempt_policy=args.preempt_policy)
 
 
 if __name__ == "__main__":

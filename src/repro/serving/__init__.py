@@ -1,6 +1,7 @@
 """Continuous-batching BNN inference engine (paged KV cache +
 photonic-aware scheduling).  See docs/serving.md."""
-from repro.serving.block_cache import BlockAllocator, BlockKVCache  # noqa: F401
+from repro.serving.block_cache import (                             # noqa: F401
+    BlockAllocator, BlockKVCache, PrefixIndex, chunk_key)
 from repro.serving.cost_model import PhotonicCostModel, gemm_specs  # noqa: F401
 from repro.serving.engine import Engine, EngineConfig               # noqa: F401
 from repro.serving.request import Request, State                    # noqa: F401

@@ -1,22 +1,72 @@
-"""Block-paged KV cache: free-list allocator + device pools.
+"""Block-paged KV cache: refcounted free-list allocator, content-
+addressed prefix index, copy-on-write, and swap-to-host.
 
 The device-side pools live in ``models/transformer.init_paged_cache``
 (one (num_blocks, block_size, hkv, dh) pool per layer, k and v); this
 module owns the host-side bookkeeping: which physical blocks belong to
-which sequence, and the padded (B, max_blocks) block tables the jitted
-steps consume.  Block 0 is reserved as a scratch block (padded rows and
-masked writes are redirected there), so the allocator hands out ids
-from 1..num_blocks-1.
+which sequence, the padded (B, max_blocks) block tables the jitted
+steps consume, and the ownership model over physical blocks:
+
+  * every used block carries a REFCOUNT — a block may be owned by
+    several sequences at once (shared prompt prefix) plus the prefix
+    index itself; it returns to the free list only when the last
+    reference drops;
+  * the PREFIX INDEX maps a content hash chain (one sha256 per full
+    token block, chained on the parent hash so equal token windows at
+    different depths never collide) to the physical block already
+    holding that KV — an incoming prompt walks the chain and adopts
+    every hit instead of re-prefilling it;
+  * a shared block is NEVER written in place: ``make_writable``
+    copies it to a fresh block first (copy-on-write), so a hit can be
+    extended without corrupting the other owners;
+  * ``swap_out``/``swap_in`` move a preempted sequence's blocks to
+    host buffers (per-block ``jax.device_get``) and back, so resuming
+    restores KV instead of recomputing it.
+
+Block 0 is reserved as a scratch block (padded rows and masked writes
+are redirected there), so the allocator hands out ids from
+1..num_blocks-1.  Invariants (property-tested in
+tests/test_block_alloc_props.py):
+
+  free + used + RESERVED == num_blocks     (never leaks, never forges)
+  refcount(b) == 0  <=>  b is on the free list
+  alloc(n) is all-or-nothing
 """
 from __future__ import annotations
 
+import functools
+import hashlib
+import time
+from collections import OrderedDict
+
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.models import transformer as M
 
 
+# Pool updates outside the engine's step functions follow the same
+# donation discipline as the steps themselves: the old pool buffer is
+# donated so XLA updates the touched blocks in place instead of
+# double-buffering the whole per-layer cache.
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _cow_copy(pool, src, dst):
+    return {"k": pool["k"].at[dst].set(pool["k"][src]),
+            "v": pool["v"].at[dst].set(pool["v"][src])}
+
+
+# one block per call: the (block_size, hkv, dh) operand shape is fixed,
+# so a swap-in compiles once, not once per distinct swapped-block count
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _host_restore(pool, dst, host_k, host_v):
+    return {"k": pool["k"].at[dst].set(host_k),
+            "v": pool["v"].at[dst].set(host_v)}
+
+
 class BlockAllocator:
-    """LIFO free-list over physical block ids 1..num_blocks-1."""
+    """Refcounted LIFO free-list over physical block ids 1..num_blocks-1."""
 
     RESERVED = 1  # block 0 = scratch
 
@@ -25,7 +75,7 @@ class BlockAllocator:
             raise ValueError("need at least 2 blocks (one is scratch)")
         self.num_blocks = num_blocks
         self._free = list(range(num_blocks - 1, 0, -1))  # pop() -> 1 first
-        self._used: set[int] = set()
+        self._ref: dict[int, int] = {}                   # used block -> refs
 
     @property
     def capacity(self) -> int:
@@ -37,40 +87,176 @@ class BlockAllocator:
 
     @property
     def num_used(self) -> int:
-        return len(self._used)
+        return len(self._ref)
+
+    def refcount(self, block: int) -> int:
+        return self._ref.get(block, 0)
 
     def alloc(self, n: int) -> list[int] | None:
-        """All-or-nothing allocation of n blocks; None when short."""
+        """All-or-nothing allocation of n blocks (refcount 1 each);
+        None when short."""
         if n < 0:
             raise ValueError(n)
         if n > len(self._free):
             return None
         out = [self._free.pop() for _ in range(n)]
-        self._used.update(out)
+        for b in out:
+            self._ref[b] = 1
         return out
+
+    def incref(self, block: int):
+        if block not in self._ref:
+            raise ValueError(f"incref of free/foreign block {block}")
+        self._ref[block] += 1
+
+    def decref(self, block: int) -> bool:
+        """Drop one reference; True iff the block returned to the free
+        list."""
+        if block not in self._ref:
+            raise ValueError(f"double/foreign free of block {block}")
+        self._ref[block] -= 1
+        if self._ref[block] == 0:
+            del self._ref[block]
+            self._free.append(block)
+            return True
+        return False
 
     def free(self, blocks: list[int]):
         for b in blocks:
-            if b not in self._used:
-                raise ValueError(f"double/foreign free of block {b}")
-            self._used.remove(b)
-            self._free.append(b)
+            self.decref(b)
+
+    def check(self):
+        """Assert the allocator invariants (used by property tests)."""
+        assert self.num_free + self.num_used + self.RESERVED \
+            == self.num_blocks, "block leak/forgery"
+        assert not (set(self._free) & set(self._ref)), \
+            "block both free and used"
+        assert all(r >= 1 for r in self._ref.values()), \
+            "used block with refcount 0"
+        assert 0 not in self._free and 0 not in self._ref, \
+            "scratch block entered circulation"
+
+
+def chunk_key(parent: str, tokens: np.ndarray) -> str:
+    """Content hash of one full token block, chained on the parent
+    block's key so equal windows at different prefix depths differ."""
+    h = hashlib.sha256()
+    h.update(parent.encode())
+    h.update(np.ascontiguousarray(tokens, np.int32).tobytes())
+    return h.hexdigest()
+
+
+class PrefixIndex:
+    """hash-chain -> physical block, LRU-ordered for eviction.
+
+    The index holds one reference on every entry's block, so cached KV
+    survives its producing request; under pool pressure ``evict`` drops
+    idle entries leaf-first in LRU order.  Each entry remembers its
+    parent key: evicting a chain's head before its tail would leave
+    unreachable entries that still pin blocks (a prompt walk breaks at
+    the missing parent), so only entries no other entry chains from
+    are candidates, and freeing a leaf exposes its parent to the next
+    pass."""
+
+    def __init__(self):
+        self._map: OrderedDict[str, tuple[int, str]] = OrderedDict()
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._map)
+
+    def lookup(self, key: str) -> int | None:
+        entry = self._map.get(key)
+        if entry is None:
+            return None
+        self._map.move_to_end(key)
+        return entry[0]
+
+    def insert(self, key: str, block: int, parent: str,
+               allocator: BlockAllocator) -> bool:
+        """Register block under key (index takes a reference); a
+        duplicate key keeps the existing block."""
+        if key in self._map:
+            self._map.move_to_end(key)
+            return False
+        allocator.incref(block)
+        self._map[key] = (block, parent)
+        return True
+
+    def evict(self, allocator: BlockAllocator, n: int) -> int:
+        """Free up to n cached blocks nobody else references (leaf
+        entries in LRU order first); returns how many were freed."""
+        freed = 0
+        while freed < n:
+            parents = {p for _, p in self._map.values()}
+            progress = False
+            for key in list(self._map):
+                if freed >= n:
+                    break
+                if key in parents:
+                    continue                     # a chain still needs it
+                block, _ = self._map[key]
+                if allocator.refcount(block) == 1:  # only the index holds it
+                    del self._map[key]
+                    allocator.decref(block)
+                    self.evictions += 1
+                    freed += 1
+                    progress = True
+            if not progress:
+                break
+        return freed
 
 
 class BlockKVCache:
-    """Device pools + allocator + block-table assembly."""
+    """Device pools + refcounted allocator + prefix index + block-table
+    assembly."""
 
     def __init__(self, cfg, *, num_blocks: int, block_size: int,
-                 max_model_len: int, dtype=np.float32):
+                 max_model_len: int, dtype=np.float32,
+                 prefix_cache: bool = True):
         self.cfg = cfg
         self.block_size = block_size
         self.num_blocks = num_blocks
         self.max_blocks_per_seq = -(-max_model_len // block_size)
         self.allocator = BlockAllocator(num_blocks)
         self.pools = M.init_paged_cache(cfg, num_blocks, block_size, dtype)
+        self.prefix = PrefixIndex() if prefix_cache else None
+        # prefix-cache counters (engine.stats surfaces these)
+        self.prefix_queries = 0          # full prompt blocks walked
+        self.prefix_hits = 0             # blocks adopted from the index
+        self.skipped_prefill_tokens = 0  # prompt tokens never re-prefilled
+        self.cow_copies = 0
+        # swap counters
+        self.swap_outs = 0
+        self.swap_ins = 0
+        self.swapped_blocks = 0
+        self.swap_out_s = 0.0
+        self.swap_in_s = 0.0
 
     def blocks_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.block_size)
+
+    def reset_stats(self, *, flush_prefix: bool = False):
+        """Zero the prefix/swap counters (e.g. after jit warmup);
+        ``flush_prefix`` also drops every idle cached block."""
+        if self.prefix is not None:
+            if flush_prefix:
+                self.prefix.evict(self.allocator, len(self.prefix))
+            self.prefix.evictions = 0
+        self.prefix_queries = self.prefix_hits = 0
+        self.skipped_prefill_tokens = self.cow_copies = 0
+        self.swap_outs = self.swap_ins = self.swapped_blocks = 0
+        self.swap_out_s = self.swap_in_s = 0.0
+
+    # ------------------------------------------------------ allocation
+
+    def _alloc(self, n: int) -> list[int] | None:
+        """alloc, evicting idle prefix-cached blocks under pressure."""
+        got = self.allocator.alloc(n)
+        if got is None and self.prefix is not None:
+            self.prefix.evict(self.allocator, n - self.allocator.num_free)
+            got = self.allocator.alloc(n)
+        return got
 
     def ensure_capacity(self, req, n_tokens: int) -> bool:
         """Grow ``req.blocks`` to cover n_tokens cache slots; False if
@@ -78,7 +264,7 @@ class BlockKVCache:
         need = self.blocks_for(n_tokens) - len(req.blocks)
         if need <= 0:
             return True
-        got = self.allocator.alloc(need)
+        got = self._alloc(need)
         if got is None:
             return False
         req.blocks.extend(got)
@@ -89,12 +275,157 @@ class BlockKVCache:
             self.allocator.free(req.blocks)
         req.blocks = []
 
+    # ---------------------------------------------------- prefix cache
+
+    def match_prefix(self, prompt: np.ndarray) -> tuple[list[int], int, str]:
+        """Walk the prompt's full-block hash chain through the index.
+
+        Returns (matched block ids NOT yet increfed, tokens covered,
+        chain key of the last match).  A full-prompt match keeps every
+        block but re-prefills the final token, so the caller always has
+        one prefill position left to produce first-token logits (the
+        write lands in a shared block — copy-on-write handles it)."""
+        if self.prefix is None:
+            return [], 0, ""
+        bs = self.block_size
+        n_full = len(prompt) // bs
+        blocks, parent = [], ""
+        for j in range(n_full):
+            key = chunk_key(parent, prompt[j * bs:(j + 1) * bs])
+            b = self.prefix.lookup(key)
+            if b is None:
+                break
+            blocks.append(b)
+            parent = key
+        n_tok = len(blocks) * bs
+        if n_tok >= len(prompt):
+            n_tok = len(prompt) - 1
+        return blocks, n_tok, parent
+
+    def alloc_prompt(self, req) -> bool:
+        """Admission-time allocation: adopt prefix-cached blocks for the
+        matched prompt head, allocate fresh blocks for the rest, and
+        start the request at ``pos = matched tokens`` (prefill skip).
+        All-or-nothing; False when the pool is short."""
+        matched, n_tok, parent = self.match_prefix(req.prompt)
+        for b in matched:           # pin before _alloc may evict LRU entries
+            self.allocator.incref(b)
+        need = self.blocks_for(req.prompt_len) - len(matched)
+        got = self._alloc(need)
+        if got is None:
+            for b in matched:
+                self.allocator.decref(b)
+            return False
+        req.blocks = matched + got
+        req.pos = n_tok
+        req.skipped_prefill = n_tok
+        req.n_registered = len(matched)
+        req.prefix_key = parent
+        # counted only on successful admission: a deferred request
+        # re-matches every retry and would otherwise deflate hit_rate
+        if self.prefix is not None:
+            n_full = req.prompt_len // self.block_size
+            self.prefix_queries += min(len(matched) + 1, n_full)
+            self.prefix_hits += len(matched)
+        self.skipped_prefill_tokens += n_tok
+        return True
+
+    def register_prefix(self, req):
+        """Publish req's freshly prefilled FULL prompt blocks into the
+        index (content-hash chained after the already-registered head)."""
+        if self.prefix is None:
+            return
+        bs = self.block_size
+        n_full = min(req.pos, req.prompt_len) // bs
+        while req.n_registered < n_full:
+            j = req.n_registered
+            key = chunk_key(req.prefix_key, req.prompt[j * bs:(j + 1) * bs])
+            self.prefix.insert(key, req.blocks[j], req.prefix_key,
+                               self.allocator)
+            req.prefix_key = key
+            req.n_registered += 1
+
+    # --------------------------------------------------- copy-on-write
+
+    def writable_indices(self, pos: int, n: int) -> range:
+        """Logical block indices a write of n tokens at pos touches."""
+        bs = self.block_size
+        return range(pos // bs, (pos + n - 1) // bs + 1)
+
+    def make_writable(self, req, idx: int) -> bool:
+        """Copy-on-write: if req's idx-th block is shared, move req onto
+        a private copy before it is written.  False when no block is
+        available for the copy (caller preempts)."""
+        block = req.blocks[idx]
+        if self.allocator.refcount(block) == 1:
+            return True
+        got = self._alloc(1)
+        if got is None:
+            return False
+        new = got[0]
+        src, dst = jnp.int32(block), jnp.int32(new)
+        for li, pool in enumerate(self.pools):
+            self.pools[li] = _cow_copy(pool, src, dst)
+        self.allocator.decref(block)
+        req.blocks[idx] = new
+        self.cow_copies += 1
+        return True
+
+    # ---------------------------------------------------- swap-to-host
+
+    def swap_out(self, req):
+        """Move req's KV blocks to host buffers (device->host per-block
+        ``jax.device_get``) and release the device blocks.  Shared
+        blocks are copied too (their content is identical) — the device
+        side only drops req's reference."""
+        t0 = time.perf_counter()
+        ids = np.asarray(req.blocks, np.int32)
+        host = []
+        for pool in self.pools:
+            host.append({
+                "k": np.ascontiguousarray(jax.device_get(pool["k"][ids])),
+                "v": np.ascontiguousarray(jax.device_get(pool["v"][ids])),
+            })
+        req.host_kv = host
+        self.allocator.free(req.blocks)
+        req.blocks = []
+        self.swap_outs += 1
+        self.swapped_blocks += len(ids)
+        self.swap_out_s += time.perf_counter() - t0
+
+    def swap_in(self, req) -> bool:
+        """Restore a swapped request: allocate fresh device blocks and
+        copy the host buffers back.  False when the pool is short."""
+        n = req.host_kv[0]["k"].shape[0]
+        got = self._alloc(n)
+        if got is None:
+            return False
+        t0 = time.perf_counter()
+        for li, h in enumerate(req.host_kv):
+            pool = self.pools[li]
+            for j, b in enumerate(got):
+                pool = _host_restore(pool, jnp.int32(b), h["k"][j], h["v"][j])
+            self.pools[li] = pool
+        # async dispatch: sync so the timer covers the actual copies
+        jax.block_until_ready([p["k"] for p in self.pools])
+        req.blocks = got
+        req.host_kv = None
+        self.swap_ins += 1
+        self.swap_in_s += time.perf_counter() - t0
+        return True
+
+    # ----------------------------------------------------- block table
+
     def table_rows(self, reqs, batch: int) -> np.ndarray:
         """Padded (batch, max_blocks_per_seq) block table; padded rows
         and unowned slots point at scratch block 0."""
         mb = self.max_blocks_per_seq
         table = np.zeros((batch, mb), np.int32)
         for i, r in enumerate(reqs):
-            ids = r.blocks[:mb]
-            table[i, :len(ids)] = ids
+            if len(r.blocks) > mb:
+                raise ValueError(
+                    f"request {r.rid}: {len(r.blocks)} blocks exceed "
+                    f"max_blocks_per_seq={mb} — the block table cannot "
+                    "address them (raise max_model_len or block_size)")
+            table[i, :len(r.blocks)] = r.blocks
         return table

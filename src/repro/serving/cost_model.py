@@ -91,6 +91,24 @@ class PhotonicCostModel:
         """Batch-1-sequential accelerator: B rows = B tokens back-to-back."""
         return n_tokens * self.token_latency_s
 
+    def serving_report(self, *, prefill_tokens: int, decode_tokens: int,
+                       skipped_tokens: int = 0) -> dict:
+        """Modeled accelerator cost of a served token stream.  Prompt
+        tokens adopted from the prefix cache never ran their GEMMs, so
+        they cost nothing on the modeled OXBNN either — the effective
+        rate credits them as served for free."""
+        computed = prefill_tokens + decode_tokens
+        wall = self.step_latency_s(computed)
+        return {
+            "modeled_wall_s": wall,
+            "modeled_tokens_per_s": self.modeled_tokens_per_s,
+            "modeled_effective_tokens_per_s": (
+                (computed + skipped_tokens) / wall if wall
+                else self.modeled_tokens_per_s),
+            "prefill_skip_speedup": (
+                (computed + skipped_tokens) / computed if computed else 1.0),
+        }
+
     def report(self) -> dict:
         tc = self.token_cost
         return {

@@ -43,6 +43,8 @@ class EngineConfig:
     max_tokens_in_flight: int = 1 << 30
     max_batched_tokens: int = 256
     accelerator: str = "OXBNN_50"    # photonic cost-model target
+    prefix_cache: bool = True        # content-addressed prompt block reuse
+    preempt_policy: str = "swap"     # swap | recompute (fallback)
 
 
 class Engine:
@@ -56,13 +58,15 @@ class Engine:
         self.ecfg = ecfg
         self.cache = BlockKVCache(cfg, num_blocks=ecfg.num_blocks,
                                   block_size=ecfg.block_size,
-                                  max_model_len=ecfg.max_model_len)
+                                  max_model_len=ecfg.max_model_len,
+                                  prefix_cache=ecfg.prefix_cache)
         self.scheduler = Scheduler(
             SchedulerConfig(max_batch=ecfg.max_batch,
                             max_tokens_in_flight=ecfg.max_tokens_in_flight,
                             max_batched_tokens=ecfg.max_batched_tokens,
                             prefill_chunk=ecfg.prefill_chunk,
-                            policy=ecfg.policy),
+                            policy=ecfg.policy,
+                            preempt_policy=ecfg.preempt_policy),
             self.cache)
         self.cost_model = PhotonicCostModel(cfg, ecfg.accelerator)
         self.requests: dict[int, Request] = {}
@@ -144,6 +148,11 @@ class Engine:
     def _run_prefill(self, step: int, req: Request, chunk: int):
         if not self.scheduler.grow_or_preempt(step, req, req.pos + chunk):
             return                     # req itself was preempted
+        # copy-on-write: never scatter into a block another owner shares
+        # (the full-prefix-match case re-prefills its final token here)
+        for idx in self.cache.writable_indices(req.pos, chunk):
+            if not self.scheduler.make_writable(step, req, idx):
+                return
         cp = self.ecfg.prefill_chunk   # fixed padded shape (no re-jit)
         tokens = np.zeros((1, cp), np.int32)
         tokens[0, :chunk] = req.prompt[req.pos:req.pos + chunk]
@@ -155,6 +164,7 @@ class Engine:
         self.cache.pools = pools
         req.pos += chunk
         self._prefilled += chunk
+        self.cache.register_prefix(req)
         self.scheduler._ev(step, "prefill", req.rid, tokens=chunk,
                            pos=req.pos)
         if req.pos == req.prompt_len:
@@ -181,7 +191,9 @@ class Engine:
         for r in reqs:
             if r not in self.scheduler.running or r.state != State.DECODE:
                 continue
-            if self.scheduler.grow_or_preempt(step, r, r.pos + 1):
+            if self.scheduler.grow_or_preempt(step, r, r.pos + 1) \
+                    and self.scheduler.make_writable(
+                        step, r, r.pos // self.ecfg.block_size):
                 ready.append(r)
         # a later grow may have preempted an earlier 'ready' row
         ready = [r for r in ready
@@ -216,6 +228,15 @@ class Engine:
 
     # -------------------------------------------------------------- stats
 
+    def reset_stats(self, *, flush_prefix: bool = False):
+        """Zero the token/wall/cache counters without touching request
+        or scheduler state — benches call this after jit warmup so the
+        measured window starts from a clean slate."""
+        self._wall_s = 0.0
+        self._decoded = self._prefilled = 0
+        self._max_concurrent = 0
+        self.cache.reset_stats(flush_prefix=flush_prefix)
+
     def stats(self) -> dict:
         finished = [r for r in self.requests.values()
                     if r.state == State.FINISHED]
@@ -227,7 +248,7 @@ class Engine:
                 return float("nan")
             return lat[min(int(p / 100 * len(lat)), len(lat) - 1)]
 
-        total = self._decoded + self._prefilled
+        c = self.cache
         return {
             "steps": self.step_count,
             "finished": len(finished),
@@ -240,9 +261,30 @@ class Engine:
             "p99_latency_s": pct(99),
             "max_concurrent_decode": self._max_concurrent,
             "preemptions": sum(r.preemptions for r in self.requests.values()),
+            "prefix_cache": {
+                "enabled": c.prefix is not None,
+                "queries": c.prefix_queries,
+                "hits": c.prefix_hits,
+                "hit_rate": (c.prefix_hits / c.prefix_queries
+                             if c.prefix_queries else 0.0),
+                "skipped_prefill_tokens": c.skipped_prefill_tokens,
+                "cow_copies": c.cow_copies,
+                "cached_blocks": len(c.prefix) if c.prefix is not None else 0,
+                "evictions": (c.prefix.evictions
+                              if c.prefix is not None else 0),
+            },
+            "swap": {
+                "swap_outs": c.swap_outs,
+                "swap_ins": c.swap_ins,
+                "swapped_blocks": c.swapped_blocks,
+                "swap_out_s": c.swap_out_s,
+                "swap_in_s": c.swap_in_s,
+            },
             "photonic": {
                 **self.cost_model.report(),
-                "modeled_wall_s": self.cost_model.step_latency_s(total),
-                "modeled_tokens_per_s": self.cost_model.modeled_tokens_per_s,
+                **self.cost_model.serving_report(
+                    prefill_tokens=self._prefilled,
+                    decode_tokens=self._decoded,
+                    skipped_tokens=c.skipped_prefill_tokens),
             },
         }

@@ -1,8 +1,16 @@
 """Request lifecycle for the continuous-batching engine.
 
-A request moves QUEUED -> PREFILL -> DECODE -> FINISHED; preemption
-(block-pool pressure) sends it back to QUEUED with its progress
-discarded (recompute-on-resume, the usual paged-KV preemption policy).
+A request moves QUEUED -> PREFILL -> DECODE -> FINISHED.  Preemption
+(block-pool pressure) takes one of two paths, chosen by the scheduler's
+``preempt_policy``:
+
+  * ``swap``      — KV blocks are copied to host buffers and the
+                    request parks as SWAPPED with its progress intact;
+                    re-admission restores the blocks and resumes where
+                    it left off;
+  * ``recompute`` — blocks are dropped and the request returns to
+                    QUEUED with its progress discarded (the classic
+                    recompute-on-resume policy).
 """
 from __future__ import annotations
 
@@ -16,6 +24,7 @@ class State(enum.Enum):
     QUEUED = "queued"
     PREFILL = "prefill"
     DECODE = "decode"
+    SWAPPED = "swapped"                # preempted, KV parked on host
     FINISHED = "finished"
 
 
@@ -32,8 +41,13 @@ class Request:
     pos: int = 0                       # tokens written to the KV cache
     out: list[int] = field(default_factory=list)
     blocks: list[int] = field(default_factory=list)
-    slot: int | None = None
     preemptions: int = 0
+    # prefix-cache bookkeeping (owned by BlockKVCache)
+    skipped_prefill: int = 0           # prompt tokens adopted from the index
+    n_registered: int = 0              # full prompt blocks published
+    prefix_key: str = ""               # hash-chain key of the last one
+    # swap-to-host: per-layer {"k","v"} host copies of owned blocks
+    host_kv: list | None = None
     # step/time marks for latency accounting
     submit_step: int | None = None
     admit_step: int | None = None
@@ -62,12 +76,21 @@ class Request:
         return self.prompt_len + self.max_new
 
     def reset_for_requeue(self):
-        """Preemption discards cache + progress; tokens are recomputed."""
+        """Recompute preemption discards cache + progress."""
         self.state = State.QUEUED
         self.pos = 0
         self.out.clear()
         self.blocks = []
-        self.slot = None
+        self.host_kv = None
+        self.skipped_prefill = 0
+        self.n_registered = 0
+        self.prefix_key = ""
+        self.preemptions += 1
+
+    def park_swapped(self):
+        """Swap preemption keeps progress; blocks were moved to
+        ``host_kv`` by BlockKVCache.swap_out before this is called."""
+        self.state = State.SWAPPED
         self.preemptions += 1
 
     def full_sequence(self) -> np.ndarray:

@@ -3,7 +3,12 @@ interleaving, and block-pressure preemption.
 
 Each engine step the scheduler emits a StepPlan:
   * admit   — queued requests move to running while a batch slot, the
-              token budget, and prompt blocks are all available;
+              token budget, and prompt blocks are all available.  A
+              fresh request's prompt is first matched against the
+              prefix index (``cache.alloc_prompt``): cached blocks are
+              adopted and prefill starts past them.  A SWAPPED request
+              is restored from its host buffers (``cache.swap_in``)
+              and resumes exactly where it was preempted;
   * prefill — ONE running request advances by one prompt chunk (chunk
               size capped so prefill tokens + decode rows stay under
               ``max_batched_tokens`` — decode latency is protected from
@@ -12,8 +17,9 @@ Each engine step the scheduler emits a StepPlan:
 
 Policies: "fcfs" (arrival order) or "priority" (higher first, FCFS
 within a class).  When the block pool runs dry the lowest-priority /
-youngest running request is preempted: blocks freed, progress dropped,
-request requeued (recompute-on-resume).
+youngest running request is preempted; ``preempt_policy`` picks how:
+"swap" parks its KV on the host and resumes it later, "recompute"
+drops progress and re-runs from scratch (the fallback policy).
 
 Every action appends a trace event — tests assert continuous batching
 (mid-stream admission, concurrent decode) on this trace.
@@ -33,6 +39,7 @@ class SchedulerConfig:
     max_batched_tokens: int = 256     # per-step compute budget
     prefill_chunk: int = 16
     policy: str = "fcfs"              # fcfs | priority
+    preempt_policy: str = "swap"      # swap | recompute
 
 
 @dataclass
@@ -49,6 +56,8 @@ class StepPlan:
 
 class Scheduler:
     def __init__(self, cfg: SchedulerConfig, cache: BlockKVCache):
+        if cfg.preempt_policy not in ("swap", "recompute"):
+            raise ValueError(f"unknown preempt_policy {cfg.preempt_policy}")
         self.cfg = cfg
         self.cache = cache
         self.queue: list[Request] = []
@@ -90,25 +99,34 @@ class Scheduler:
                     > self.cfg.max_tokens_in_flight):
                 self._ev(step, "defer", req.rid, reason="token_budget")
                 break
-            blocks = self.cache.allocator.alloc(
-                self.cache.blocks_for(req.prompt_len))
-            if blocks is None:
+            if req.state == State.SWAPPED:
+                if not self.cache.swap_in(req):
+                    self._ev(step, "defer", req.rid, reason="no_blocks")
+                    break
+                req.state = (State.DECODE if req.pos >= req.prompt_len
+                             else State.PREFILL)
+                self.queue.remove(req)
+                self.running.append(req)
+                plan.admitted.append(req)
+                self._ev(step, "swap_in", req.rid, pos=req.pos,
+                         blocks=len(req.blocks))
+                continue
+            if not self.cache.alloc_prompt(req):
                 self._ev(step, "defer", req.rid, reason="no_blocks")
                 break
-            req.blocks = blocks
             req.state = State.PREFILL
-            req.pos = 0
             req.admit_step = step
             self.queue.remove(req)
             self.running.append(req)
             plan.admitted.append(req)
-            self._ev(step, "admit", req.rid,
-                     running=len(self.running), blocks=len(blocks))
+            self._ev(step, "admit", req.rid, running=len(self.running),
+                     blocks=len(req.blocks),
+                     cached_tokens=req.skipped_prefill)
 
     # ---------------------------------------------------------- preemption
 
     def _preempt_one(self, step: int, protect: Request) -> bool:
-        """Free blocks by requeueing the lowest-priority / youngest
+        """Free blocks by preempting the lowest-priority / youngest
         running request — possibly ``protect`` itself.  Preempting the
         youngest (requeued with its ORIGINAL seniority) guarantees the
         oldest request always keeps its blocks, so two growing requests
@@ -117,16 +135,32 @@ class Scheduler:
                          key=lambda r: (r.priority, -r._order))
         victim = victims[0]
         self.running.remove(victim)
-        self.cache.release(victim)
-        victim.reset_for_requeue()
+        # a request with no computed KV has nothing worth swapping
+        if self.cfg.preempt_policy == "swap" and victim.pos > 0:
+            self.cache.swap_out(victim)
+            victim.park_swapped()
+            self._ev(step, "swap_out", victim.rid, pos=victim.pos,
+                     preemptions=victim.preemptions)
+        else:
+            self.cache.release(victim)
+            victim.reset_for_requeue()
+            self._ev(step, "evict", victim.rid,
+                     preemptions=victim.preemptions)
         self.queue.append(victim)
-        self._ev(step, "evict", victim.rid, preemptions=victim.preemptions)
         return victim is not protect
 
     def grow_or_preempt(self, step: int, req: Request, n_tokens: int) -> bool:
         """Ensure req's blocks cover n_tokens cache slots, preempting
         under pool pressure.  False iff req itself got preempted."""
         while not self.cache.ensure_capacity(req, n_tokens):
+            if not self._preempt_one(step, req):
+                return False
+        return True
+
+    def make_writable(self, step: int, req: Request, idx: int) -> bool:
+        """Copy-on-write req's idx-th block if shared, preempting for
+        the copy's block under pressure.  False iff req was preempted."""
+        while not self.cache.make_writable(req, idx):
             if not self._preempt_one(step, req):
                 return False
         return True

@@ -18,10 +18,13 @@ class settings:
     _profiles: dict[str, dict] = {}
     _active: dict = {"max_examples": 20, "deadline": None}
 
-    def __init__(self, **kw):  # tolerate @settings(...) usage
+    def __init__(self, **kw):  # per-test @settings(...) usage
         self.kw = kw
 
     def __call__(self, f):
+        # attach so a @given-wrapped test reads its own max_examples
+        # instead of whichever global profile was loaded last
+        f._hyp_settings = self.kw
         return f
 
     @classmethod
@@ -61,7 +64,9 @@ def given(*strats: _Strategy):
         @functools.wraps(f)
         def wrapper(*args, **kwargs):
             rng = random.Random(f.__qualname__)
-            n = int(settings._active.get("max_examples", 20))
+            own = getattr(wrapper, "_hyp_settings", {})
+            n = int(own.get("max_examples",
+                            settings._active.get("max_examples", 20)))
             for i in range(n):
                 vals = [s.example_at(rng, i) for s in strats]
                 f(*args, *vals, **kwargs)

@@ -13,3 +13,21 @@ def _single_device_guard():
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")
+
+
+# shared serving fixtures (tests/test_serving.py, tests/test_prefix_swap.py):
+# one reduced BNN model per suite run — init is pure, params are read-only
+# (the engine donates only the KV pools)
+
+@pytest.fixture(scope="session")
+def bnn_cfg():
+    from repro import configs
+    from repro.configs.base import reduced
+    return reduced(configs.get_config("bnn-lm-100m")).replace(precision="bnn")
+
+
+@pytest.fixture(scope="session")
+def bnn_params(bnn_cfg):
+    from repro.models import transformer as M
+    params, _ = M.init(jax.random.PRNGKey(0), bnn_cfg)
+    return params

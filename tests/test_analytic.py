@@ -21,6 +21,7 @@ def _flops_cost_analysis(fn, *args):
     return float(ca["flops"])
 
 
+@pytest.mark.slow  # compiles a full forward to diff against XLA's HLO cost analysis
 def test_forward_flops_vs_cost_analysis_dense():
     """Reduced llama-family, forward pass, loop-free shapes: the analytic
     model must match XLA within ~15% (XLA counts some non-matmul ops we

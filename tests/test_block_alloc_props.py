@@ -1,0 +1,120 @@
+"""Property-based tests for the refcounted BlockAllocator.
+
+Random interleavings of alloc / share (prefix-cache adoption) / free /
+swap-out must preserve the ownership invariants the serving engine
+leans on:
+
+  * free + used + RESERVED == num_blocks   (no leak, no forgery)
+  * refcount(b) == 0  <=>  b is on the free list
+  * alloc(n) is all-or-nothing and leaves state untouched on failure
+  * freeing an unowned block raises (double-free detection)
+
+Runs under real hypothesis when installed, else the deterministic
+tests/_hypothesis_shim.py fallback.
+"""
+import random
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # tiny deterministic fallback (tests/_hypothesis_shim.py)
+    from _hypothesis_shim import given, settings, strategies as st
+
+from repro.serving import BlockAllocator
+
+# per-test @settings, NOT a register_profile("ci")/load_profile pair:
+# other test modules re-register that global profile with fewer
+# examples at import time, and collection order would silently shrink
+# these sweeps
+
+
+def _assert_invariants(a: BlockAllocator, model: dict[int, int]):
+    a.check()
+    assert a.num_free + a.num_used + a.RESERVED == a.num_blocks
+    assert a.num_used == len(model)
+    for b, refs in model.items():
+        assert a.refcount(b) == refs >= 1
+    # refcount 0 <=> on the free list: every non-modeled id is free
+    for b in range(1, a.num_blocks):
+        if b not in model:
+            assert a.refcount(b) == 0
+            assert b in a._free
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 48), st.integers(0, 2 ** 31 - 1))
+def test_random_interleavings_never_leak_or_double_free(num_blocks, seed):
+    rng = random.Random(seed)
+    a = BlockAllocator(num_blocks)
+    model: dict[int, int] = {}           # block -> expected refcount
+    owners: list[list[int]] = []         # each owner holds one ref/block
+
+    for _ in range(120):
+        op = rng.choice(["alloc", "alloc", "share", "free", "swap_out"])
+        if op == "alloc":
+            n = rng.randint(0, a.capacity + 2)
+            before = a.num_free
+            got = a.alloc(n)
+            if n > before:
+                # all-or-nothing: failure leaves the allocator untouched
+                assert got is None and a.num_free == before
+            else:
+                assert got is not None and len(got) == len(set(got)) == n
+                assert 0 not in got
+                for b in got:
+                    assert b not in model, "handed out a used block"
+                    model[b] = 1
+                owners.append(got)
+        elif op == "share" and owners:
+            # a second sequence adopts an owner's blocks (prefix hit)
+            src = rng.choice(owners)
+            for b in src:
+                a.incref(b)
+                model[b] += 1
+            owners.append(list(src))
+        elif op in ("free", "swap_out") and owners:
+            # swap-out releases device refs exactly like free; the
+            # host copy carries no allocator state
+            victim = owners.pop(rng.randrange(len(owners)))
+            a.free(victim)
+            for b in victim:
+                model[b] -= 1
+                if model[b] == 0:
+                    del model[b]
+        _assert_invariants(a, model)
+
+    # drain: everything returns, nothing lost
+    for o in owners:
+        a.free(o)
+    assert a.num_free == a.capacity and a.num_used == 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 32), st.integers(0, 2 ** 31 - 1))
+def test_double_free_always_raises(num_blocks, seed):
+    rng = random.Random(seed)
+    a = BlockAllocator(num_blocks)
+    got = a.alloc(rng.randint(1, a.capacity))
+    a.free(got)
+    before = (a.num_free, a.num_used)
+    with pytest.raises(ValueError):
+        a.free([rng.choice(got)])
+    assert (a.num_free, a.num_used) == before  # failed free changed nothing
+    with pytest.raises(ValueError):
+        a.incref(rng.choice(got))              # can't share a freed block
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_scratch_block_never_circulates(seed):
+    rng = random.Random(seed)
+    a = BlockAllocator(rng.randint(2, 64))
+    seen = set()
+    while (got := a.alloc(rng.randint(1, max(1, a.num_free or 1)))):
+        seen.update(got)
+        if a.num_free == 0:
+            break
+    assert 0 not in seen and len(seen) == a.capacity
+    with pytest.raises(ValueError):
+        a.free([0])

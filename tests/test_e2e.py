@@ -41,6 +41,7 @@ def test_serve_bnn_mode():
     assert (seqs >= 0).all()
 
 
+@pytest.mark.slow
 def test_microbatch_accumulation_matches_single_batch():
     """grad-accum over 4 microbatches == one big batch (linearity)."""
     from repro import configs

@@ -17,6 +17,7 @@ settings.register_profile("ci", max_examples=10, deadline=None)
 settings.load_profile("ci")
 
 
+@pytest.mark.slow  # heavy example sweep; fast lane keeps the decode/forward equivalence tests
 @given(st.integers(1, 3), st.integers(1, 40), st.integers(1, 4),
        st.sampled_from([(4, 4), (4, 2), (8, 1)]), st.integers(0, 10 ** 6))
 def test_flash_attention_matches_reference(b, t, dh_mult, heads, seed):
@@ -102,6 +103,7 @@ def test_moe_matches_dense_reference_no_drops():
     assert float(aux) > 0
 
 
+@pytest.mark.slow  # heavy example sweep; test_moe_matches_dense_reference stays fast
 @given(st.integers(1, 64), st.integers(2, 8), st.integers(1, 4),
        st.integers(0, 10 ** 6))
 def test_moe_dispatch_table_invariants(t, e, k, seed):
@@ -160,6 +162,7 @@ def test_ssd_chunked_vs_recurrence_vs_decode():
                                np.asarray(ref), rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.slow  # heavy example sweep; chunked-vs-recurrence equivalence stays fast
 @given(st.sampled_from([4, 8, 16, 32]), st.integers(0, 10 ** 6))
 def test_ssd_chunk_size_invariance(chunk, seed):
     cfg = _SsmCfg()

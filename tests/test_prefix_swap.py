@@ -1,0 +1,267 @@
+"""Prefix caching + swap-to-host: cache-level unit tests and engine
+differential tests.
+
+The differential contract: greedy outputs are TOKEN-IDENTICAL with
+prefix caching on vs off, and under forced swap-to-host preemption vs
+recompute-on-resume — caching and preemption policy change cost, never
+results.
+"""
+import numpy as np
+import pytest
+
+from repro.serving import BlockKVCache, Request, State
+from test_serving import _engine  # bnn_cfg/bnn_params live in conftest.py
+
+
+def _cache(cfg, **kw):
+    defaults = dict(num_blocks=17, block_size=4, max_model_len=32)
+    defaults.update(kw)
+    return BlockKVCache(cfg, **defaults)
+
+
+def _req(rid, prompt):
+    return Request(rid, np.asarray(prompt, np.int32), 4)
+
+
+# ---------------------------------------------------------- cache level
+
+def test_prefix_match_adopts_registered_blocks(bnn_cfg):
+    cache = _cache(bnn_cfg)
+    prompt = np.arange(10, dtype=np.int32)        # 2 full blocks + 2 tail
+    r1 = _req(0, prompt)
+    assert cache.alloc_prompt(r1)
+    assert r1.pos == 0 and r1.skipped_prefill == 0
+    r1.pos = 10                                    # prefill "ran"
+    cache.register_prefix(r1)
+    assert len(cache.prefix) == 2                  # only FULL prompt blocks
+    shared = r1.blocks[:2]
+    cache.release(r1)                              # index keeps its refs
+
+    r2 = _req(1, prompt)                           # same prompt, later
+    assert cache.alloc_prompt(r2)
+    assert r2.blocks[:2] == shared                 # adopted, not re-alloced
+    assert r2.pos == r2.skipped_prefill == 8       # prefill skipped
+    assert cache.allocator.refcount(shared[0]) == 2   # index + r2
+
+    r3 = _req(2, np.concatenate([prompt[:4], 90 + np.arange(6)]))
+    assert cache.alloc_prompt(r3)                  # diverges after block 0
+    assert r3.blocks[0] == shared[0] and r3.blocks[1] != shared[1]
+    assert r3.pos == 4
+    assert cache.allocator.refcount(shared[0]) == 3
+
+
+def test_full_prompt_match_keeps_one_token_to_prefill(bnn_cfg):
+    cache = _cache(bnn_cfg)
+    prompt = np.arange(8, dtype=np.int32)          # exactly 2 blocks
+    r1 = _req(0, prompt)
+    cache.alloc_prompt(r1)
+    r1.pos = 8
+    cache.register_prefix(r1)
+    cache.release(r1)
+    r2 = _req(1, prompt)
+    cache.alloc_prompt(r2)
+    # every block is adopted but the final token re-prefills, so the
+    # engine still produces first-token logits (write goes through CoW)
+    assert len(r2.blocks) == 2 and r2.pos == 7
+
+
+def test_cow_never_mutates_a_shared_block(bnn_cfg):
+    cache = _cache(bnn_cfg)
+    r1, r2 = _req(0, np.arange(4)), _req(1, np.arange(4))
+    r1.blocks = cache.allocator.alloc(1)
+    cache.allocator.incref(r1.blocks[0])
+    r2.blocks = list(r1.blocks)                    # shared (refcount 2)
+    shared = r1.blocks[0]
+    cache.pools[0]["k"] = cache.pools[0]["k"].at[shared].set(7.0)
+
+    assert cache.make_writable(r2, 0)
+    assert r2.blocks[0] != shared                  # r2 moved to a copy
+    assert r1.blocks[0] == shared                  # r1 untouched
+    assert cache.allocator.refcount(shared) == 1
+    assert cache.cow_copies == 1
+    np.testing.assert_array_equal(                 # copy carries content
+        np.asarray(cache.pools[0]["k"][r2.blocks[0]]),
+        np.asarray(cache.pools[0]["k"][shared]))
+    # unshared block: no copy
+    assert cache.make_writable(r1, 0) and r1.blocks[0] == shared
+    assert cache.cow_copies == 1
+
+
+def test_prefix_eviction_under_pressure(bnn_cfg):
+    cache = _cache(bnn_cfg, num_blocks=5)          # 4 allocatable
+    r1 = _req(0, np.arange(8, dtype=np.int32))     # 2 blocks, both full
+    cache.alloc_prompt(r1)
+    r1.pos = 8
+    cache.register_prefix(r1)
+    cache.release(r1)                              # blocks live on, cached
+    assert cache.allocator.num_used == 2
+    r2 = _req(1, 50 + np.arange(16, dtype=np.int32))  # needs all 4 blocks
+    assert cache.alloc_prompt(r2)                  # evicts the cached pair
+    assert cache.prefix.evictions == 2 and len(cache.prefix) == 0
+    assert cache.allocator.num_used == 4
+
+
+def test_swap_roundtrip_restores_block_content(bnn_cfg):
+    cache = _cache(bnn_cfg)
+    r = _req(0, np.arange(8, dtype=np.int32))
+    assert cache.alloc_prompt(r)
+    ids = np.asarray(r.blocks)
+    for li in range(len(cache.pools)):
+        cache.pools[li]["k"] = cache.pools[li]["k"].at[ids].add(1.5 + li)
+        cache.pools[li]["v"] = cache.pools[li]["v"].at[ids].add(2.5 + li)
+    want = [np.asarray(cache.pools[li]["k"][ids])
+            for li in range(len(cache.pools))]
+
+    cache.swap_out(r)
+    assert r.blocks == [] and r.host_kv is not None
+    assert cache.allocator.num_used == 0           # device refs dropped
+    assert cache.swap_outs == 1
+
+    assert cache.swap_in(r)
+    assert len(r.blocks) == 2 and r.host_kv is None
+    for li in range(len(cache.pools)):
+        np.testing.assert_array_equal(
+            np.asarray(cache.pools[li]["k"][np.asarray(r.blocks)]),
+            want[li])
+
+
+def test_table_rows_raises_on_block_overflow(bnn_cfg):
+    """A request holding more blocks than the table can address must
+    raise, not silently truncate its KV view."""
+    cache = _cache(bnn_cfg, num_blocks=17, block_size=4, max_model_len=8)
+    assert cache.max_blocks_per_seq == 2
+    r = _req(0, np.arange(4, dtype=np.int32))
+    r.blocks = cache.allocator.alloc(3)            # one block too many
+    with pytest.raises(ValueError, match="max_blocks_per_seq"):
+        cache.table_rows([r], 1)
+    r.blocks = r.blocks[:2]                        # within bounds: fine
+    assert cache.table_rows([r], 1).shape == (1, 2)
+
+
+# --------------------------------------------------------- engine level
+
+def test_prefix_hit_skips_prefill_steps(bnn_cfg, bnn_params):
+    """Acceptance: with two requests sharing a >= 2-block prompt
+    prefix, the second request's engine-reported prefill step count
+    drops by the shared-block amount, at unchanged greedy tokens."""
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, bnn_cfg.vocab, 8)     # 2 full blocks @ bs=4
+    p1 = np.concatenate([shared, rng.integers(0, bnn_cfg.vocab, 3)])
+    p2 = np.concatenate([shared, rng.integers(0, bnn_cfg.vocab, 2)])
+
+    def run(prefix_cache):
+        eng = _engine(bnn_cfg, bnn_params, prefix_cache=prefix_cache)
+        out = {}
+        r1 = eng.submit(p1, 6)
+        out.update(eng.run())
+        r2 = eng.submit(p2, 6)                     # arrives after r1 done
+        out.update(eng.run())
+        prefills = [sum(1 for e in eng.scheduler.trace
+                        if e["event"] == "prefill" and e["rid"] == r)
+                    for r in (r1, r2)]
+        return eng, out[r1], out[r2], prefills
+
+    eng, a1, b1, (pf1, pf2) = run(True)
+    st = eng.stats()["prefix_cache"]
+    assert st["hits"] == 2 and st["hit_rate"] > 0
+    assert st["skipped_prefill_tokens"] == 8       # the 2 shared blocks
+    assert pf1 == 3 and pf2 == 1                   # 11->3 chunks vs 10->1
+
+    eng0, a0, b0, (qf1, qf2) = run(False)
+    assert qf2 == 3                                # no cache: full prefill
+    assert eng0.stats()["prefix_cache"]["enabled"] is False
+    np.testing.assert_array_equal(a1, a0)          # tokens unchanged
+    np.testing.assert_array_equal(b1, b0)
+
+
+def _run_poisson_trace(cfg, params, *, seed=7, n_requests=5, **ekw):
+    """Seeded Poisson-arrival trace driven step-by-step (arrival times
+    quantized to engine steps, so every run replays identically)."""
+    rng = np.random.default_rng(seed)
+    arrival_steps = np.cumsum(rng.exponential(2.0, n_requests)).astype(int)
+    shared = rng.integers(0, cfg.vocab, 8)         # half the trace shares
+    prompts = [np.concatenate([shared, rng.integers(0, cfg.vocab, 3)])
+               if i % 2 == 0 else rng.integers(0, cfg.vocab, 7)
+               for i in range(n_requests)]
+
+    eng = _engine(cfg, params, **ekw)
+    rids, i, guard = {}, 0, 0
+    while i < n_requests or not eng.scheduler.idle:
+        while i < n_requests and eng.step_count >= arrival_steps[i]:
+            rids[i] = eng.submit(prompts[i], 5)
+            i += 1
+        eng.step()
+        guard += 1
+        assert guard < 2000, "trace did not converge"
+    assert all(eng.requests[r].state == State.FINISHED
+               for r in rids.values())
+    return eng, [eng.requests[rids[k]].full_sequence()
+                 for k in range(n_requests)]
+
+
+@pytest.mark.slow
+def test_differential_prefix_and_preempt_policies(bnn_cfg, bnn_params):
+    """Satellite: one seeded Poisson trace, four engine configs —
+    greedy outputs are token-identical with prefix caching on vs off
+    and under forced swap-to-host preemption vs recompute."""
+    base, ref = _run_poisson_trace(bnn_cfg, bnn_params,
+                                   prefix_cache=False,
+                                   preempt_policy="recompute")
+    pfx, got = _run_poisson_trace(bnn_cfg, bnn_params,
+                                  prefix_cache=True,
+                                  preempt_policy="swap")
+    assert pfx.stats()["prefix_cache"]["hits"] > 0
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(a, b)
+
+    # tiny pool: preemption is forced; swap and recompute still agree
+    # with each other and with a pressure-free pool (n_requests changes
+    # the rng stream, so the reference reruns the same 3-request trace)
+    tiny = dict(block_size=2, max_batch=2, max_model_len=16)
+    swp, s_out = _run_poisson_trace(bnn_cfg, bnn_params, n_requests=3,
+                                    num_blocks=11, prefix_cache=True,
+                                    preempt_policy="swap", **tiny)
+    rec, r_out = _run_poisson_trace(bnn_cfg, bnn_params, n_requests=3,
+                                    num_blocks=11, prefix_cache=True,
+                                    preempt_policy="recompute", **tiny)
+    calm, c_out = _run_poisson_trace(bnn_cfg, bnn_params, n_requests=3,
+                                     num_blocks=65, prefix_cache=False,
+                                     preempt_policy="recompute", **tiny)
+    assert swp.stats()["swap"]["swap_outs"] >= 1, "swap never exercised"
+    assert rec.stats()["swap"]["swap_outs"] == 0
+    assert rec.stats()["preemptions"] >= 1
+    assert calm.stats()["preemptions"] == 0
+    for a, b, c in zip(s_out, r_out, c_out):
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(a, c)
+
+
+def test_swapped_request_resumes_without_recompute(bnn_cfg, bnn_params):
+    """Swap preemption preserves progress: the victim's re-admission is
+    a swap_in (no extra prefill work), and its tokens match a run
+    without any pressure."""
+    kw = dict(block_size=2, num_blocks=9, max_batch=2, max_model_len=12,
+              prefill_chunk=4)
+    rng = np.random.default_rng(1)
+    pa, pb = rng.integers(0, bnn_cfg.vocab, 4), \
+        rng.integers(0, bnn_cfg.vocab, 4)
+
+    eng = _engine(bnn_cfg, bnn_params, preempt_policy="swap", **kw)
+    ra, rb = eng.submit(pa, 8), eng.submit(pb, 8)
+    out = eng.run()
+    trace = eng.scheduler.trace
+    assert any(e["event"] == "swap_out" for e in trace)
+    swap_ins = [e for e in trace if e["event"] == "swap_in"]
+    assert swap_ins and all(e["pos"] > 0 for e in swap_ins)
+    # progress was preserved: no victim ever prefilled the same prompt
+    # position twice (recompute would)
+    for rid in (ra, rb):
+        seen = [e["pos"] for e in trace
+                if e["event"] == "prefill" and e["rid"] == rid]
+        assert len(seen) == len(set(seen))
+
+    calm = _engine(bnn_cfg, bnn_params, max_model_len=12)
+    ca, cb = calm.submit(pa, 8), calm.submit(pb, 8)
+    ref = calm.run()
+    np.testing.assert_array_equal(out[ra], ref[ca])
+    np.testing.assert_array_equal(out[rb], ref[cb])

@@ -8,24 +8,14 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro import configs
-from repro.configs.base import reduced
 from repro.models import transformer as M
 from repro.serving import (BlockAllocator, BlockKVCache, Engine,
                            EngineConfig, PhotonicCostModel, Request,
                            Scheduler, SchedulerConfig, State)
 
 
-@pytest.fixture(scope="module")
-def bnn_cfg():
-    return reduced(configs.get_config("bnn-lm-100m")).replace(precision="bnn")
-
-
-@pytest.fixture(scope="module")
-def bnn_params(bnn_cfg):
-    params, _ = M.init(jax.random.PRNGKey(0), bnn_cfg)
-    return params
-
+# bnn_cfg / bnn_params come from tests/conftest.py (shared with
+# tests/test_prefix_swap.py)
 
 # ------------------------------------------------------------- allocator
 
@@ -165,6 +155,7 @@ def test_chunked_prefill_logit_equivalent_to_full_forward(bnn_cfg,
 
 # ------------------------------------------------------------------ engine
 
+@pytest.mark.slow  # runs serve() twice end-to-end; engine paths are covered by the fast cases below
 def test_engine_matches_legacy_serve_greedy():
     """The paged engine reproduces the old serve() loop token-for-token
     (greedy, packed XNOR inference path)."""
@@ -207,10 +198,13 @@ def test_continuous_batching_admits_mid_stream(bnn_cfg, bnn_params):
 
 
 def test_engine_preemption_recovers(bnn_cfg, bnn_params):
-    """Block-pool pressure evicts the youngest request; it requeues,
-    recomputes, and still finishes with its full generation."""
+    """Block-pool pressure evicts the youngest request; under the
+    recompute fallback policy it requeues, recomputes, and still
+    finishes with its full generation (swap-to-host is exercised in
+    test_prefix_swap.py)."""
     eng = _engine(bnn_cfg, bnn_params, block_size=2, num_blocks=9,
-                  max_batch=2, max_model_len=12)
+                  max_batch=2, max_model_len=12,
+                  preempt_policy="recompute")
     rng = np.random.default_rng(1)
     ra = eng.submit(rng.integers(0, bnn_cfg.vocab, 4), 8)
     rb = eng.submit(rng.integers(0, bnn_cfg.vocab, 4), 8)
