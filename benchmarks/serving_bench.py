@@ -3,14 +3,20 @@
 For each arch, an open-loop client submits requests with exponential
 inter-arrival times while the engine steps; a fraction of the stream
 (``--shared-frac``) shares one of a few prompt prefixes, the pattern
-prefix caching exploits.  Reported per arch:
+prefix caching exploits.  The arch table covers one row per mixer
+family — paged-KV (dense GQA), recurrent slots (mamba2), paged latents
+(deepseek MLA), ring buffers (mixtral SWA).  Reported per arch:
 
   * wall-clock generated tokens/s
   * p50 / p99 request latency (arrival -> last token)
   * max concurrent decode rows (continuous batching actually engaged)
-  * prefix-cache hit-rate and total swap time (out+in)
+  * prefix-cache hit-rate, ring-buffer block-reuse rate, and total
+    swap time (out+in)
+  * per-mixer-family state-pool occupancy (peak used blocks/slots over
+    pool capacity)
   * modeled OXBNN accelerator tokens/s (photonic cost model, with
-    skipped-prefill credit)
+    skipped-prefill credit) — mapped for every family, incl. SSD chunk
+    matmuls and MLA latent projections
 
 Usage (CPU smoke, reduced configs):
   PYTHONPATH=src python benchmarks/serving_bench.py --smoke --prefix-cache
@@ -28,7 +34,10 @@ from repro.configs.base import reduced
 from repro.models import transformer as M
 from repro.serving import Engine, EngineConfig
 
-SMOKE_ARCHS = ["bnn-lm-100m", "qwen1.5-0.5b", "llama3.2-3b"]
+# one row per mixer family: paged KV, slot (ssm), paged latent (mla),
+# ring buffer (sliding window)
+SMOKE_ARCHS = ["bnn-lm-100m", "qwen1.5-0.5b", "llama3.2-3b",
+               "mamba2-1.3b", "deepseek-v2-lite-16b", "mixtral-8x7b"]
 
 
 def make_prompts(rng, vocab: int, n_requests: int, prompt_len: int,
@@ -117,7 +126,8 @@ def bench_arch(arch: str, *, smoke: bool, n_requests: int, rate_hz: float,
                   for rid, arr in submitted.items()
                   if eng.requests[rid].finish_s is not None)
     st = eng.stats()
-    pc, sw = st["prefix_cache"], st["swap"]
+    pc, sw, mx = st["prefix_cache"], st["swap"], st["mixer"]
+    blk, slt = mx.get("blocks"), mx.get("slots")
     return {
         "arch": arch, "requests": n_requests,
         "tokens_per_s": st["decoded_tokens"] / wall,
@@ -127,6 +137,10 @@ def bench_arch(arch: str, *, smoke: bool, n_requests: int, rate_hz: float,
         "preemptions": st["preemptions"],
         "prefix_hit_rate": pc["hit_rate"],
         "skipped_prefill_tokens": pc["skipped_prefill_tokens"],
+        "ring_reuse_rate": blk["ring_reuse_rate"] if blk else 0.0,
+        "block_occupancy": blk["occupancy"] if blk else float("nan"),
+        "slot_occupancy": slt["occupancy"] if slt else float("nan"),
+        "families": "+".join(f"{k}:{v['layout']}" for k, v in mx.items()),
         "swap_s": sw["swap_out_s"] + sw["swap_in_s"],
         "swaps": sw["swap_outs"] + sw["swap_ins"],
         "modeled_tokens_per_s": st["photonic"]["modeled_tokens_per_s"],
@@ -165,8 +179,12 @@ def main():
     plen = args.prompt_len or (8 if args.smoke else 64)
     gen = args.gen or (8 if args.smoke else 64)
 
-    print(f"{'arch':<18} {'tok/s':>8} {'p50(s)':>8} {'p99(s)':>8} "
-          f"{'maxconc':>8} {'evict':>6} {'hit%':>6} {'swap(ms)':>9} "
+    def occ(v):
+        return "   -" if np.isnan(v) else f"{100 * v:>3.0f}%"
+
+    print(f"{'arch':<22} {'tok/s':>8} {'p50(s)':>8} {'p99(s)':>8} "
+          f"{'maxconc':>8} {'evict':>6} {'hit%':>6} {'reuse%':>7} "
+          f"{'blk-occ':>8} {'slot-occ':>9} {'swap(ms)':>9} "
           f"{'modeled tok/s':>14} {'eff tok/s':>12}")
     for arch in archs:
         r = bench_arch(arch, smoke=args.smoke, n_requests=n, rate_hz=rate,
@@ -176,10 +194,13 @@ def main():
                        prefix_cache=args.prefix_cache,
                        preempt_policy=args.preempt_policy,
                        shared_frac=args.shared_frac)
-        print(f"{r['arch']:<18} {r['tokens_per_s']:>8.1f} "
+        print(f"{r['arch']:<22} {r['tokens_per_s']:>8.1f} "
               f"{r['p50_latency_s']:>8.3f} {r['p99_latency_s']:>8.3f} "
               f"{r['max_concurrent']:>8d} {r['preemptions']:>6d} "
               f"{100 * r['prefix_hit_rate']:>6.1f} "
+              f"{100 * r['ring_reuse_rate']:>7.1f} "
+              f"{occ(r['block_occupancy']):>8} "
+              f"{occ(r['slot_occupancy']):>9} "
               f"{1e3 * r['swap_s']:>9.2f} "
               f"{r['modeled_tokens_per_s']:>14.0f} "
               f"{r['modeled_effective_tokens_per_s']:>12.0f}")

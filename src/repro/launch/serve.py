@@ -2,15 +2,17 @@
 
 The OXBNN payoff path: with --precision bnn every projection runs the
 packed XNOR-popcount GEMM (1-bit weights/activations), the paper's
-inference mode.  Requests flow through repro.serving.Engine — block-
-paged KV cache, chunked prefill interleaved with decode, per-step
+inference mode.  Requests flow through repro.serving.Engine — paged
+mixer-state cache, chunked prefill interleaved with decode, per-step
 admission — and the photonic cost model reports modeled accelerator
 tokens/s next to wall-clock.
 
-``engine="legacy"`` keeps the original token-by-token batch loop as the
-correctness reference (tests assert the engine reproduces its greedy
-tokens exactly); SSM/MLA/sliding-window archs fall back to it
-automatically.
+Every arch family runs the paged engine: full-attention GQA pages KV
+blocks, MLA pages compressed latents, sliding-window attention runs
+ring-buffer block tables, and SSM keeps per-request recurrent slots
+(see docs/serving.md "Mixer-state layouts").  ``engine="legacy"`` keeps
+the original token-by-token batch loop ONLY as the differential-test
+oracle — tests assert the engine reproduces its greedy tokens exactly.
 
 Usage (CPU smoke):
   PYTHONPATH=src python -m repro.launch.serve --arch bnn-lm-100m --smoke \
@@ -95,12 +97,7 @@ def serve(arch: str, *, smoke: bool = False, multi_pod: bool = False,
           prefix_cache: bool = True, preempt_policy: str = "swap"):
     """Serve ``batch`` synthetic requests; returns (batch, prompt+gen)
     token ids (prompt prefix included, matching the legacy loop)."""
-    cfg = configs.get_config(arch)
-    if smoke:
-        cfg = reduced(cfg)
-    if engine == "legacy" or not M.paged_compatible(cfg):
-        if engine != "legacy":
-            print(f"[serve] {arch}: not paged-compatible, legacy fallback")
+    if engine == "legacy":
         return serve_legacy(arch, smoke=smoke, multi_pod=multi_pod,
                             batch=batch, prompt_len=prompt_len, gen=gen,
                             precision=precision, seed=seed, greedy=greedy)
@@ -129,6 +126,13 @@ def serve(arch: str, *, smoke: bool = False, multi_pod: bool = False,
                   f"tokens/s={stats['tokens_per_s']:.1f} "
                   f"steps={stats['steps']} "
                   f"max_concurrent={stats['max_concurrent_decode']}")
+            for fam, mx in stats["mixer"].items():
+                occ = 100 * mx["occupancy"]
+                extra = (f" ring_blocks={mx['ring_blocks']} "
+                         f"reuse={100 * mx['ring_reuse_rate']:.0f}%"
+                         if mx.get("ring_blocks") else "")
+                print(f"[serve] mixer[{fam}] layout={mx['layout']} "
+                      f"layers={mx['layers']} occupancy={occ:.0f}%{extra}")
             print(f"[serve] prefix-cache "
                   f"{'on' if pc['enabled'] else 'off'}: "
                   f"hit-rate={pc['hit_rate']:.2f} "

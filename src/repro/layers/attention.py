@@ -23,7 +23,8 @@ NEG_INF = -1e30
 def _chunk_attend(q, k, v, q_pos, k_pos, causal, window, kv_len):
     """Scores + online-softmax terms for one (q_chunk, kv_chunk) tile.
 
-    q: (B, Tq, H, Dh); k, v: (B, Sk, Hkv, Dh); q_pos (B, Tq); k_pos (Sk,);
+    q: (B, Tq, H, Dh); k, v: (B, Sk, Hkv, Dh); q_pos (B, Tq); k_pos (B, Sk)
+    per-row absolute key positions (negative = unwritten slot, masked);
     kv_len None, scalar, or (B,) (per-row valid KV length — paged decode).
     Returns (m, l, o) partials: m (B, H, Tq), l (B, H, Tq), o (B, Tq, H, Dh).
     """
@@ -35,14 +36,14 @@ def _chunk_attend(q, k, v, q_pos, k_pos, causal, window, kv_len):
     kf = k.astype(jnp.float32)
     # (B, Hkv, G, Tq, Sk)
     scores = jnp.einsum("btkgd,bskd->bkgts", qf.reshape(b, tq, hkv, g, dh), kf)
-    mask = jnp.ones((b, tq, sk), bool)
+    mask = k_pos[:, None, :] >= 0
     if causal:
-        mask &= q_pos[:, :, None] >= k_pos[None, None, :]
+        mask &= q_pos[:, :, None] >= k_pos[:, None, :]
     if window is not None and window > 0:
-        mask &= q_pos[:, :, None] - k_pos[None, None, :] < window
+        mask &= q_pos[:, :, None] - k_pos[:, None, :] < window
     if kv_len is not None:
         kl = jnp.broadcast_to(jnp.asarray(kv_len), (b,))
-        mask &= k_pos[None, None, :] < kl[:, None, None]
+        mask &= k_pos[:, None, :] < kl[:, None, None]
     scores = jnp.where(mask[:, None, None], scores, NEG_INF)
     m = jnp.max(scores, axis=-1)                        # (B,Hkv,G,Tq)
     p = jnp.exp(scores - m[..., None])
@@ -72,6 +73,7 @@ def attention(q: Array, k: Array, v: Array, *,
               window: int | None = None,
               q_offset: int = 0,
               kv_len: Array | None = None,
+              k_positions: Array | None = None,
               q_chunk: int = 512,
               kv_chunk: int = 1024) -> Array:
     """Chunked flash-style attention.
@@ -81,6 +83,11 @@ def attention(q: Array, k: Array, v: Array, *,
       chunked prefill where every sequence sits at a different length).
     kv_len: optional dynamic valid length of k/v (decode with cache).
       Scalar or (B,) per-row lengths.
+    k_positions: optional (B, S) absolute position of every key slot,
+      overriding the default arange — ring-buffer caches store keys out
+      of positional order (slot = pos mod ring). Causal/window/kv_len
+      masks all operate on these positions; negative entries mark
+      never-written slots and are always masked.
     """
     b, t, h, dh = q.shape
     s = k.shape[1]
@@ -96,12 +103,17 @@ def attention(q: Array, k: Array, v: Array, *,
     vp = jnp.pad(v, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
     eff_len = kv_len if kv_len is not None else s
     q_off = jnp.broadcast_to(jnp.asarray(q_offset), (b,))
+    if k_positions is None:
+        kpos_full = jnp.broadcast_to(jnp.arange(sp, dtype=jnp.int32)[None],
+                                     (b, sp))
+    else:
+        kpos_full = jnp.pad(k_positions.astype(jnp.int32),
+                            ((0, 0), (0, sp - s)), constant_values=-1)
 
     nq = tp // q_chunk
     nk = sp // kv_chunk
 
     q_pos_base = jnp.arange(q_chunk)
-    k_pos_base = jnp.arange(kv_chunk)
 
     def one_q_chunk(qc, qi):
         q_pos = q_pos_base[None, :] + qi * q_chunk + q_off[:, None]
@@ -114,7 +126,8 @@ def attention(q: Array, k: Array, v: Array, *,
             m1, l1, o1 = carry
             kc = jax.lax.dynamic_slice_in_dim(kp, ki * kv_chunk, kv_chunk, 1)
             vc = jax.lax.dynamic_slice_in_dim(vp, ki * kv_chunk, kv_chunk, 1)
-            k_pos = k_pos_base + ki * kv_chunk
+            k_pos = jax.lax.dynamic_slice_in_dim(
+                kpos_full, ki * kv_chunk, kv_chunk, 1)
             m2, l2, o2, _ = _chunk_attend(
                 qc, kc, vc, q_pos, k_pos, causal, window, eff_len)
             return _merge(m1, l1, o1, m2, l2, o2), None
@@ -140,7 +153,7 @@ def attention(q: Array, k: Array, v: Array, *,
 
 
 def attention_reference(q, k, v, *, causal=True, window=None, q_offset=0,
-                        kv_len=None):
+                        kv_len=None, k_positions=None):
     """O(T*S) reference for tests."""
     b, t, h, dh = q.shape
     s = k.shape[1]
@@ -151,15 +164,16 @@ def attention_reference(q, k, v, *, causal=True, window=None, q_offset=0,
     scores = jnp.einsum("bthd,bshd->bhts", q.astype(jnp.float32) * dh ** -0.5, kf)
     q_pos = jnp.arange(t)[None] + jnp.broadcast_to(jnp.asarray(q_offset),
                                                    (b,))[:, None]
-    k_pos = jnp.arange(s)
-    mask = jnp.ones((b, t, s), bool)
+    k_pos = (jnp.broadcast_to(jnp.arange(s), (b, s))
+             if k_positions is None else k_positions)
+    mask = k_pos[:, None, :] >= 0
     if causal:
-        mask &= q_pos[:, :, None] >= k_pos[None, None, :]
+        mask &= q_pos[:, :, None] >= k_pos[:, None, :]
     if window is not None and window > 0:
-        mask &= q_pos[:, :, None] - k_pos[None, None, :] < window
+        mask &= q_pos[:, :, None] - k_pos[:, None, :] < window
     if kv_len is not None:
         kl = jnp.broadcast_to(jnp.asarray(kv_len), (b,))
-        mask &= k_pos[None, None, :] < kl[:, None, None]
+        mask &= k_pos[:, None, :] < kl[:, None, None]
     scores = jnp.where(mask[:, None], scores, NEG_INF)
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhts,bshd->bthd", p, vf)

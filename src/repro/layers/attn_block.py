@@ -74,10 +74,18 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.float32):
 # index -> physical id.  Block 0 is a reserved scratch block: writes for
 # padded/inactive rows are redirected there and never read back (every
 # read is masked by the per-row kv_len).
+#
+# Sliding-window archs run the same pool as a RING: logical block index
+# (pos // bs) wraps modulo the table width, so a sequence only ever owns
+# a window-sized block list and the trailing block is recycled to the
+# front as the window advances.  Keys then sit out of positional order,
+# so reads pass explicit per-slot absolute positions (ring_key_positions)
+# into the attention mask instead of the arange default.
 
 
-def init_paged_cache(cfg, num_blocks: int, block_size: int,
+def init_paged_state(cfg, num_blocks: int, block_size: int,
                      dtype=jnp.float32):
+    """Per-layer paged KV pool (the GQA mixer-state layout)."""
     hkv, dh = cfg.n_kv_heads, cfg.head_dim
     return {
         "k": jnp.zeros((num_blocks, block_size, hkv, dh), dtype),
@@ -86,52 +94,79 @@ def init_paged_cache(cfg, num_blocks: int, block_size: int,
 
 
 def gather_blocks(pool: Array, block_table: Array) -> Array:
-    """(num_blocks, bs, hkv, dh) x (B, max_blocks) -> (B, max_blocks*bs,
-    hkv, dh) — a sequence's KV, logically contiguous.  Slots past the
-    owned blocks point at scratch block 0; callers mask by kv_len."""
-    nb, bs, hkv, dh = pool.shape
+    """(num_blocks, bs, *rest) x (B, max_blocks) -> (B, max_blocks*bs,
+    *rest) — a sequence's cached state, logically contiguous.  Slots past
+    the owned blocks point at scratch block 0; callers mask by kv_len /
+    key positions."""
+    nb, bs, *rest = pool.shape
     b, mb = block_table.shape
-    return pool[block_table].reshape(b, mb * bs, hkv, dh)
+    return pool[block_table].reshape(b, mb * bs, *rest)
 
 
 def scatter_blocks(pool: Array, block_table: Array, positions: Array,
-                   values: Array, valid: Array) -> Array:
+                   values: Array, valid: Array, *,
+                   ring: bool = False) -> Array:
     """Write per-row token values into the paged pool.
 
-    positions (B, C) absolute token positions; values (B, C, hkv, dh);
+    positions (B, C) absolute token positions; values (B, C, *rest);
     valid (B, C) bool — invalid writes are redirected to scratch block 0.
+    ring=True wraps the logical block index modulo the table width
+    (sliding-window ring buffer) instead of clipping.
     """
-    nb, bs, hkv, dh = pool.shape
+    nb, bs, *rest = pool.shape
     mb = block_table.shape[1]
-    bidx = jnp.clip(positions // bs, 0, mb - 1)                 # (B, C)
+    bidx = positions // bs                                      # (B, C)
+    bidx = bidx % mb if ring else jnp.clip(bidx, 0, mb - 1)
     phys = jnp.take_along_axis(block_table, bidx, axis=1)       # (B, C)
     phys = jnp.where(valid, phys, 0)
     offs = jnp.where(valid, positions % bs, 0)
     return pool.at[phys.reshape(-1), offs.reshape(-1)].set(
-        values.reshape(-1, hkv, dh).astype(pool.dtype))
+        values.reshape(-1, *rest).astype(pool.dtype))
+
+
+def ring_key_positions(newest: Array, mb: int, bs: int) -> Array:
+    """(B, mb*bs) absolute position of every ring slot.
+
+    newest (B,) is the highest absolute position written; slot s holds
+    the most recent position congruent to s mod the ring capacity:
+    ``newest - ((newest - s) mod R)``.  Slots never written resolve to a
+    negative position, which the attention mask drops.
+    """
+    r = mb * bs
+    s = jnp.arange(r, dtype=jnp.int32)
+    return newest[:, None] - ((newest[:, None] - s[None, :]) % r)
 
 
 def paged_decode_step(params, cfg, x: Array, cache, block_table: Array,
                       lengths: Array, *, precision: str = "bf16",
-                      active: Array | None = None) -> tuple[Array, dict]:
+                      active: Array | None = None,
+                      ring: bool = False) -> tuple[Array, dict]:
     """One-token decode against the paged pool with PER-ROW lengths.
 
     x (B, 1, d); block_table (B, max_blocks); lengths (B,) current
-    per-sequence cache fill; active (B,) bool masks padded batch slots.
+    per-sequence cache fill; active (B,) bool masks padded batch slots;
+    ring=True treats the table as a sliding-window ring buffer.
     """
     b = x.shape[0]
+    mb = block_table.shape[1]
+    bs = cache["k"].shape[1]
     positions = lengths[:, None]                                 # (B, 1)
     q, k, v = _qkv(params, cfg, x, positions, precision)
     valid = (jnp.ones((b, 1), bool) if active is None
              else active[:, None])
     cache = {
-        "k": scatter_blocks(cache["k"], block_table, positions, k, valid),
-        "v": scatter_blocks(cache["v"], block_table, positions, v, valid),
+        "k": scatter_blocks(cache["k"], block_table, positions, k, valid,
+                            ring=ring),
+        "v": scatter_blocks(cache["v"], block_table, positions, v, valid,
+                            ring=ring),
     }
     keys = gather_blocks(cache["k"], block_table)
     vals = gather_blocks(cache["v"], block_table)
+    kpos = ring_key_positions(lengths, mb, bs) if ring else None
     o = attn_mod.attention(q, keys.astype(q.dtype), vals.astype(q.dtype),
                            causal=False, kv_len=lengths + 1,
+                           window=cfg.sliding_window, q_offset=lengths,
+                           k_positions=kpos,
                            q_chunk=1, kv_chunk=cfg.kv_chunk)
     o = o.reshape(b, 1, cfg.n_heads * cfg.head_dim)
     return C.dense(o, params["o"], precision), cache
@@ -139,26 +174,35 @@ def paged_decode_step(params, cfg, x: Array, cache, block_table: Array,
 
 def prefill_chunk(params, cfg, x: Array, cache, block_table: Array,
                   lengths: Array, n_valid: Array, *,
-                  precision: str = "bf16") -> tuple[Array, dict]:
+                  precision: str = "bf16",
+                  ring: bool = False) -> tuple[Array, dict]:
     """Chunked prefill: C tokens per row appended at per-row offsets.
 
     x (B, C, d); lengths (B,) tokens already cached; n_valid (B,) how
     many of the C chunk positions are real (the rest are padding).
-    Causal within the chunk, full attention to the cached prefix.
+    Causal within the chunk, full (or window-masked) attention to the
+    cached prefix.
     """
     b, ch, _ = x.shape
+    mb = block_table.shape[1]
+    bs = cache["k"].shape[1]
     positions = lengths[:, None] + jnp.arange(ch, dtype=jnp.int32)[None, :]
     q, k, v = _qkv(params, cfg, x, positions, precision)
     valid = jnp.arange(ch, dtype=jnp.int32)[None, :] < n_valid[:, None]
     cache = {
-        "k": scatter_blocks(cache["k"], block_table, positions, k, valid),
-        "v": scatter_blocks(cache["v"], block_table, positions, v, valid),
+        "k": scatter_blocks(cache["k"], block_table, positions, k, valid,
+                            ring=ring),
+        "v": scatter_blocks(cache["v"], block_table, positions, v, valid,
+                            ring=ring),
     }
     keys = gather_blocks(cache["k"], block_table)
     vals = gather_blocks(cache["v"], block_table)
+    kpos = (ring_key_positions(lengths + n_valid - 1, mb, bs)
+            if ring else None)
     o = attn_mod.attention(q, keys.astype(q.dtype), vals.astype(q.dtype),
                            causal=True, q_offset=lengths,
                            kv_len=lengths + n_valid,
+                           window=cfg.sliding_window, k_positions=kpos,
                            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
     o = o.reshape(b, ch, cfg.n_heads * cfg.head_dim)
     return C.dense(o, params["o"], precision), cache

@@ -194,6 +194,117 @@ def decode_step(params, cfg, x: Array, cache, *,
     return out, {"h": hstate.astype(cache["h"].dtype), "conv": new_conv}
 
 
+# ---------------------------------------------------------------------------
+# per-slot recurrent state (serving engine; see repro/serving/)
+#
+# The SSM mixer-state layout: a request's entire cache is ONE fixed-size
+# slot holding (SSD hidden state, conv tail) — O(1) in sequence length,
+# so there is no block table and nothing to page.  Slot 0 is reserved as
+# scratch (writes for padded batch rows are redirected there and never
+# read).  Swap/preempt snapshots the whole slot; prefill advances the
+# state one chunk at a time through the quadratic SSD dual form with the
+# carried initial state folded in.
+
+
+def init_paged_state(cfg, num_slots: int, dtype=jnp.float32):
+    """Per-layer slot pool (the recurrent mixer-state layout)."""
+    d_inner = cfg.ssm_expand * cfg.d_model
+    h = d_inner // cfg.ssm_headdim
+    conv_ch = d_inner + 2 * cfg.ssm_state
+    return {
+        "h": jnp.zeros((num_slots, h, cfg.ssm_state, cfg.ssm_headdim),
+                       dtype),
+        "conv": jnp.zeros((num_slots, cfg.ssm_conv - 1, conv_ch), dtype),
+    }
+
+
+def paged_decode_step(params, cfg, x: Array, cache, slots: Array, *,
+                      precision: str = "bf16",
+                      active: Array | None = None) -> tuple[Array, dict]:
+    """O(1) decode against the slot pool.  x (B, 1, d); slots (B,) slot
+    ids (padded rows masked to scratch slot 0 by ``active``)."""
+    state = {"h": cache["h"][slots], "conv": cache["conv"][slots]}
+    y, new = decode_step(params, cfg, x, state, precision=precision)
+    dst = slots if active is None else jnp.where(active, slots, 0)
+    cache = {
+        "h": cache["h"].at[dst].set(new["h"].astype(cache["h"].dtype)),
+        "conv": cache["conv"].at[dst].set(
+            new["conv"].astype(cache["conv"].dtype)),
+    }
+    return y, cache
+
+
+def prefill_chunk(params, cfg, x: Array, cache, slots: Array,
+                  n_valid: Array, *,
+                  precision: str = "bf16") -> tuple[Array, dict]:
+    """Advance each row's recurrent state by one chunk of C tokens.
+
+    x (B, C, d); n_valid (B,) real tokens per row (rest is padding —
+    masked by zeroing dt, so padded steps neither decay nor update the
+    state).  Single-chunk SSD dual form with the slot's carried state
+    h0 folded in: y_t += C_t · h0 · exp(cum_t) and the written state is
+    h0 · exp(total) + (chunk boundary state).  Chunks are engine-sized
+    (<= prefill_chunk), so the quadratic intra-chunk term stays tiny.
+    """
+    bsz, c_len, _ = x.shape
+    zxbcdt = C.dense(x, params["in_proj"], precision)
+    z, xbc, dt, d_inner, h, g, n = _split_proj(cfg, zxbcdt)
+    p = cfg.ssm_headdim
+    k = params["conv_w"].shape[0]
+
+    # depthwise causal conv with the slot's carried (k-1)-token tail
+    hist = cache["conv"][slots].astype(xbc.dtype)              # (B, k-1, ch)
+    full = jnp.concatenate([hist, xbc], axis=1)                # (B, k-1+C, ch)
+    out = sum(full[:, i:i + c_len] * params["conv_w"][i][None, None]
+              for i in range(k))
+    xbc1 = jax.nn.silu(out + params["conv_b"][None, None])
+    # new tail = last k-1 inputs up to the row's valid length
+    idx = n_valid[:, None] + jnp.arange(k - 1, dtype=jnp.int32)[None, :]
+    new_conv = jnp.take_along_axis(full, idx[:, :, None], axis=1)
+
+    xs, b_, c_ = jnp.split(xbc1, [d_inner, d_inner + g * n], axis=-1)
+    xs = xs.reshape(bsz, c_len, h, p).astype(jnp.float32)
+    b_ = b_.reshape(bsz, c_len, n).astype(jnp.float32)         # g = 1
+    c_ = c_.reshape(bsz, c_len, n).astype(jnp.float32)
+
+    valid = jnp.arange(c_len, dtype=jnp.int32)[None, :] < n_valid[:, None]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"][None, None])
+    dt = dt * valid[..., None]                                 # (B,C,H)
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+    log_decay = dt * a[None, None, :]
+    cum = jnp.cumsum(log_decay, axis=1)                        # (B,C,H)
+    total = cum[:, -1]                                         # (B,H)
+
+    # intra-chunk quadratic (attention-dual) form
+    cb = jnp.einsum("bln,bsn->bls", c_, b_)
+    seg = cum[:, :, None, :] - cum[:, None, :, :]              # (B,C,C,H)
+    causal = jnp.tril(jnp.ones((c_len, c_len), bool))
+    seg = jnp.where(causal[None, :, :, None], seg, -1e30)
+    m = cb[..., None] * jnp.exp(seg)
+    xdt = xs * dt[..., None]                                   # (B,C,H,P)
+    y = jnp.einsum("blsh,bshp->blhp", m, xdt)
+
+    # carried-state contribution + new boundary state
+    h0 = cache["h"][slots].astype(jnp.float32)                 # (B,H,N,P)
+    y = y + jnp.einsum("bln,bhnp->blhp", c_, h0) * jnp.exp(cum)[..., None]
+    w_s = jnp.exp(total[:, None, :] - cum) * dt                # (B,C,H)
+    states = jnp.einsum("blh,bln,blhp->bhnp", w_s, b_, xs)
+    hstate = h0 * jnp.exp(total)[:, :, None, None] + states
+
+    y = y + xs * params["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(bsz, c_len, d_inner).astype(x.dtype)
+    y = C.rmsnorm(y, params["norm"]) * jax.nn.silu(z)
+    out = C.dense(y, params["out_proj"], precision)
+
+    dst = jnp.where(n_valid > 0, slots, 0)
+    cache = {
+        "h": cache["h"].at[dst].set(hstate.astype(cache["h"].dtype)),
+        "conv": cache["conv"].at[dst].set(
+            new_conv.astype(cache["conv"].dtype)),
+    }
+    return out, cache
+
+
 def forward_reference(params, cfg, x: Array) -> Array:
     """O(T) sequential reference (tests): plain recurrence."""
     bsz, t, _ = x.shape

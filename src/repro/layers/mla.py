@@ -96,6 +96,96 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.float32):
     }
 
 
+# ---------------------------------------------------------------------------
+# block-paged latent cache (serving engine; see repro/serving/)
+#
+# Same block-table machinery as the GQA pool (attn_block.scatter_blocks /
+# gather_blocks are shape-generic), but each block stores the COMPRESSED
+# latents (c_kv, k_rope) instead of expanded per-head K/V — per token the
+# pool holds kv_lora_rank + qk_rope_head_dim floats rather than
+# 2 * n_heads * head_dim.  Per-head K/V are re-expanded at read time.
+
+
+def init_paged_state(cfg, num_blocks: int, block_size: int,
+                     dtype=jnp.float32):
+    """Per-layer paged latent pool (the MLA mixer-state layout)."""
+    return {
+        "c_kv": jnp.zeros((num_blocks, block_size, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((num_blocks, block_size, cfg.qk_rope_head_dim),
+                            dtype),
+    }
+
+
+def _paged_attend(params, cfg, q, cache, block_table, lengths, kv_len,
+                  newest, ring, causal):
+    from repro.layers import attn_block  # local: avoid import cycle
+
+    lat = attn_block.gather_blocks(cache["c_kv"], block_table)
+    rop = attn_block.gather_blocks(cache["k_rope"], block_table)
+    k, v = _expand_kv(params, cfg, lat.astype(q.dtype), rop.astype(q.dtype))
+    mb = block_table.shape[1]
+    bs = cache["c_kv"].shape[1]
+    kpos = (attn_block.ring_key_positions(newest, mb, bs) if ring else None)
+    return attn_mod.attention(q, k, v, causal=causal, q_offset=lengths,
+                              kv_len=kv_len, window=cfg.sliding_window,
+                              k_positions=kpos,
+                              q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+
+
+def paged_decode_step(params, cfg, x: Array, cache, block_table: Array,
+                      lengths: Array, *, precision: str = "bf16",
+                      active: Array | None = None,
+                      ring: bool = False) -> tuple[Array, dict]:
+    """One-token decode against the paged latent pool, per-row lengths."""
+    from repro.layers import attn_block
+
+    b = x.shape[0]
+    positions = lengths[:, None]                                 # (B, 1)
+    q_nope, q_rope, c_kv, k_rope = _project(params, cfg, x, positions,
+                                            precision)
+    valid = (jnp.ones((b, 1), bool) if active is None
+             else active[:, None])
+    cache = {
+        "c_kv": attn_block.scatter_blocks(
+            cache["c_kv"], block_table, positions, c_kv, valid, ring=ring),
+        "k_rope": attn_block.scatter_blocks(
+            cache["k_rope"], block_table, positions, k_rope, valid,
+            ring=ring),
+    }
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    o = _paged_attend(params, cfg, q, cache, block_table, lengths,
+                      lengths + 1, lengths, ring, causal=False)
+    o = o.reshape(b, 1, cfg.n_heads * cfg.v_head_dim)
+    return C.dense(o, params["o"], precision), cache
+
+
+def prefill_chunk(params, cfg, x: Array, cache, block_table: Array,
+                  lengths: Array, n_valid: Array, *,
+                  precision: str = "bf16",
+                  ring: bool = False) -> tuple[Array, dict]:
+    """Chunked prefill of C latent tokens per row at per-row offsets."""
+    from repro.layers import attn_block
+
+    b, ch, _ = x.shape
+    positions = lengths[:, None] + jnp.arange(ch, dtype=jnp.int32)[None, :]
+    q_nope, q_rope, c_kv, k_rope = _project(params, cfg, x, positions,
+                                            precision)
+    valid = jnp.arange(ch, dtype=jnp.int32)[None, :] < n_valid[:, None]
+    cache = {
+        "c_kv": attn_block.scatter_blocks(
+            cache["c_kv"], block_table, positions, c_kv, valid, ring=ring),
+        "k_rope": attn_block.scatter_blocks(
+            cache["k_rope"], block_table, positions, k_rope, valid,
+            ring=ring),
+    }
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    o = _paged_attend(params, cfg, q, cache, block_table, lengths,
+                      lengths + n_valid, lengths + n_valid - 1,
+                      ring, causal=True)
+    o = o.reshape(b, ch, cfg.n_heads * cfg.v_head_dim)
+    return C.dense(o, params["o"], precision), cache
+
+
 def decode_step(params, cfg, x: Array, cache, length: Array, *,
                 precision: str = "bf16") -> tuple[Array, dict]:
     """One-token decode. x: (B, 1, d_model); cache holds compressed KV."""

@@ -377,26 +377,34 @@ def cache_specs(cfg: ArchConfig):
 
 
 # ---------------------------------------------------------------------------
-# block-paged decode / chunked prefill (continuous-batching serving path;
-# see repro/serving/engine.py)
+# paged decode / chunked prefill (continuous-batching serving path; see
+# repro/serving/engine.py)
+#
+# Every mixer kind exposes the same three entry points
+# (init_paged_state / paged_decode_step / prefill_chunk) over its own
+# state layout — paged KV blocks (gqa), paged compressed latents (mla),
+# or a per-request recurrent slot (ssm); sliding-window configs run
+# their block tables as ring buffers (ring=True).  The functions below
+# dispatch per layer through layer_plan, so heterogeneous stacks
+# (hybrid ssm+attention) mix layouts freely.
 
 
-def paged_compatible(cfg: ArchConfig) -> bool:
-    """The paged serving path covers full-attention GQA stacks (every
-    assigned dense arch + the paper-native BNN LM).  SSM/MLA mixers keep
-    per-slot recurrent state and sliding windows keep a ring buffer —
-    both incompatible with token-block paging; the engine falls back to
-    the dense-slot loop for those."""
-    return (all(mix == "gqa" for mix, _ in layer_plan(cfg))
-            and cfg.sliding_window is None)
-
-
-def init_paged_cache(cfg: ArchConfig, num_blocks: int, block_size: int,
-                     dtype=jnp.float32):
-    """Flat per-layer list of block pools (layer order == plan order)."""
-    assert paged_compatible(cfg), cfg.name
-    return [attn_block.init_paged_cache(cfg, num_blocks, block_size, dtype)
-            for _ in range(cfg.n_layers)]
+def init_paged_state(cfg: ArchConfig, num_blocks: int, block_size: int,
+                     num_slots: int = 0, dtype=jnp.float32):
+    """Flat per-layer list of mixer-state pools (layer order == plan
+    order): block pools for attention layers, slot pools for SSM."""
+    states = []
+    for mix, _f in layer_plan(cfg):
+        if mix == "gqa":
+            states.append(attn_block.init_paged_state(
+                cfg, num_blocks, block_size, dtype))
+        elif mix == "mla":
+            states.append(mla.init_paged_state(
+                cfg, num_blocks, block_size, dtype))
+        else:
+            assert num_slots >= 2, (cfg.name, num_slots)
+            states.append(mamba2.init_paged_state(cfg, num_slots, dtype))
+    return states
 
 
 def _iter_layers(cfg: ArchConfig, params):
@@ -432,11 +440,14 @@ def _paged_ffn(params, cfg: ArchConfig, f: str, x, precision):
 
 def paged_decode_step(params, cfg: ArchConfig, tokens: Array, caches,
                       block_table: Array, lengths: Array,
-                      active: Array | None = None):
-    """One decode token per row against the paged pools.
+                      active: Array | None = None,
+                      slots: Array | None = None, *, ring: bool = False):
+    """One decode token per row against the paged mixer-state pools.
 
     tokens (B, 1) int32; block_table (B, max_blocks); lengths (B,)
-    per-row cache fill; active (B,) masks padded batch slots.
+    per-row cache fill; active (B,) masks padded batch slots; slots (B,)
+    recurrent slot ids for SSM layers; ring=True runs attention block
+    tables as sliding-window ring buffers.
     Returns (logits (B, 1, V), new_caches).
     """
     x = params["embed"]["w"][tokens]
@@ -445,9 +456,18 @@ def paged_decode_step(params, cfg: ArchConfig, tokens: Array, caches,
     new_caches = []
     for li, (mix, f, p) in enumerate(_iter_layers(cfg, params)):
         h = C.norm(x, p["norm1"], cfg.norm, cfg.norm_eps)
-        y, nc = attn_block.paged_decode_step(
-            p["attn"], cfg, h, caches[li], block_table, lengths,
-            precision=cfg.precision, active=active)
+        if mix == "gqa":
+            y, nc = attn_block.paged_decode_step(
+                p["attn"], cfg, h, caches[li], block_table, lengths,
+                precision=cfg.precision, active=active, ring=ring)
+        elif mix == "mla":
+            y, nc = mla.paged_decode_step(
+                p["attn"], cfg, h, caches[li], block_table, lengths,
+                precision=cfg.precision, active=active, ring=ring)
+        else:
+            y, nc = mamba2.paged_decode_step(
+                p["attn"], cfg, h, caches[li], slots,
+                precision=cfg.precision, active=active)
         new_caches.append(nc)
         x = _paged_ffn(p, cfg, f, x + y, cfg.precision)
     x = C.norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
@@ -456,11 +476,13 @@ def paged_decode_step(params, cfg: ArchConfig, tokens: Array, caches,
 
 
 def prefill_chunk(params, cfg: ArchConfig, tokens: Array, caches,
-                  block_table: Array, lengths: Array, n_valid: Array):
+                  block_table: Array, lengths: Array, n_valid: Array,
+                  slots: Array | None = None, *, ring: bool = False):
     """Jitted chunked prefill: append a chunk of C tokens per row.
 
     tokens (B, C) int32 (padded past n_valid); lengths (B,) tokens
-    already cached; n_valid (B,) real tokens in this chunk.
+    already cached; n_valid (B,) real tokens in this chunk; slots (B,)
+    recurrent slot ids for SSM layers.
     Returns (logits (B, C, V), new_caches) — logits cover every chunk
     position, so the caller reads position n_valid-1 for the first
     generated token and can check logit equivalence at all positions.
@@ -471,9 +493,18 @@ def prefill_chunk(params, cfg: ArchConfig, tokens: Array, caches,
     new_caches = []
     for li, (mix, f, p) in enumerate(_iter_layers(cfg, params)):
         h = C.norm(x, p["norm1"], cfg.norm, cfg.norm_eps)
-        y, nc = attn_block.prefill_chunk(
-            p["attn"], cfg, h, caches[li], block_table, lengths, n_valid,
-            precision=cfg.precision)
+        if mix == "gqa":
+            y, nc = attn_block.prefill_chunk(
+                p["attn"], cfg, h, caches[li], block_table, lengths,
+                n_valid, precision=cfg.precision, ring=ring)
+        elif mix == "mla":
+            y, nc = mla.prefill_chunk(
+                p["attn"], cfg, h, caches[li], block_table, lengths,
+                n_valid, precision=cfg.precision, ring=ring)
+        else:
+            y, nc = mamba2.prefill_chunk(
+                p["attn"], cfg, h, caches[li], slots, n_valid,
+                precision=cfg.precision)
         new_caches.append(nc)
         x = _paged_ffn(p, cfg, f, x + y, cfg.precision)
     x = C.norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)

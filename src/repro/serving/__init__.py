@@ -1,9 +1,11 @@
-"""Continuous-batching BNN inference engine (paged KV cache +
+"""Continuous-batching BNN inference engine (paged mixer-state cache +
 photonic-aware scheduling).  See docs/serving.md."""
 from repro.serving.block_cache import (                             # noqa: F401
-    BlockAllocator, BlockKVCache, PrefixIndex, chunk_key)
+    BlockAllocator, BlockKVCache, MixerStateCache, PrefixIndex, chunk_key)
 from repro.serving.cost_model import PhotonicCostModel, gemm_specs  # noqa: F401
 from repro.serving.engine import Engine, EngineConfig               # noqa: F401
+from repro.serving.mixer_state import (                             # noqa: F401
+    MixerState, RecurrentSlotState, layer_layouts, ring_block_count)
 from repro.serving.request import Request, State                    # noqa: F401
 from repro.serving.scheduler import (                               # noqa: F401
     Scheduler, SchedulerConfig, StepPlan)

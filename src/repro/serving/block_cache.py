@@ -1,11 +1,16 @@
-"""Block-paged KV cache: refcounted free-list allocator, content-
-addressed prefix index, copy-on-write, and swap-to-host.
+"""Block-paged mixer state: refcounted free-list allocator, content-
+addressed prefix index, copy-on-write, swap-to-host, and the composite
+cache that unifies block layouts with recurrent slots.
 
-The device-side pools live in ``models/transformer.init_paged_cache``
-(one (num_blocks, block_size, hkv, dh) pool per layer, k and v); this
-module owns the host-side bookkeeping: which physical blocks belong to
-which sequence, the padded (B, max_blocks) block tables the jitted
-steps consume, and the ownership model over physical blocks:
+``BlockKVCache`` is the block-family ``MixerState`` implementation: it
+backs both the paged layout (full attention, unbounded table) and the
+ring layout (sliding window, ``ring_blocks > 0``), over either per-head
+K/V pools (GQA) or compressed-latent pools (MLA) — the pool tensors
+come from the layer modules and every op here is shape-generic.  The
+device pools hold one (num_blocks, block_size, ...) buffer per
+attention layer; this class owns the host-side bookkeeping: which
+physical blocks belong to which sequence, the padded (B, max_blocks)
+block tables the jitted steps consume, and the ownership model:
 
   * every used block carries a REFCOUNT — a block may be owned by
     several sequences at once (shared prompt prefix) plus the prefix
@@ -20,8 +25,19 @@ steps consume, and the ownership model over physical blocks:
     copies it to a fresh block first (copy-on-write), so a hit can be
     extended without corrupting the other owners;
   * ``swap_out``/``swap_in`` move a preempted sequence's blocks to
-    host buffers (per-block ``jax.device_get``) and back, so resuming
-    restores KV instead of recomputing it.
+    host buffers (per-block ``jax.device_get``) and back — except
+    blocks already REGISTERED in the prefix index, which skip the
+    round-trip entirely: the index keeps them resident, and swap_in
+    re-adopts them by content hash (any block under the same key is
+    bit-identical).  If the index evicted the chain while the request
+    was parked, swap_in reports the content lost and the scheduler
+    falls back to recompute.
+
+In ring mode the logical block index wraps modulo ``ring_blocks``: a
+sequence's block list never exceeds the window, the trailing block is
+recycled to the front as the window advances (counted as a ring reuse),
+and prefix registration/matching is capped at the ring depth — blocks
+past it get overwritten, so only the head of the prompt is shareable.
 
 Block 0 is reserved as a scratch block (padded rows and masked writes
 are redirected there), so the allocator hands out ids from
@@ -31,6 +47,11 @@ tests/test_block_alloc_props.py):
   free + used + RESERVED == num_blocks     (never leaks, never forges)
   refcount(b) == 0  <=>  b is on the free list
   alloc(n) is all-or-nothing
+
+``MixerStateCache`` at the bottom is what the engine instantiates: the
+composite over the block-family state and the recurrent-slot state
+(``mixer_state.RecurrentSlotState``), dispatching per layer via
+``mixer_state.layer_layouts``.
 """
 from __future__ import annotations
 
@@ -43,7 +64,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import transformer as M
+from repro.layers import attn_block, mla
+from repro.models.transformer import layer_plan
+from repro.serving.mixer_state import (
+    LAYOUT_SLOT, MixerState, RecurrentSlotState, layer_layouts,
+    ring_block_count)
 
 
 # Pool updates outside the engine's step functions follow the same
@@ -53,16 +78,14 @@ from repro.models import transformer as M
 
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _cow_copy(pool, src, dst):
-    return {"k": pool["k"].at[dst].set(pool["k"][src]),
-            "v": pool["v"].at[dst].set(pool["v"][src])}
+    return {k: v.at[dst].set(v[src]) for k, v in pool.items()}
 
 
-# one block per call: the (block_size, hkv, dh) operand shape is fixed,
+# one block per call: the (block_size, ...) operand shape is fixed,
 # so a swap-in compiles once, not once per distinct swapped-block count
 @functools.partial(jax.jit, donate_argnums=(0,))
-def _host_restore(pool, dst, host_k, host_v):
-    return {"k": pool["k"].at[dst].set(host_k),
-            "v": pool["v"].at[dst].set(host_v)}
+def _host_restore(pool, dst, host):
+    return {k: v.at[dst].set(host[k]) for k, v in pool.items()}
 
 
 class BlockAllocator:
@@ -207,19 +230,35 @@ class PrefixIndex:
         return freed
 
 
-class BlockKVCache:
-    """Device pools + refcounted allocator + prefix index + block-table
-    assembly."""
+class BlockKVCache(MixerState):
+    """Block-family mixer state: device pools + refcounted allocator +
+    prefix index + block-table assembly.  ``ring_blocks > 0`` switches
+    the paged layout into the sliding-window ring layout."""
 
     def __init__(self, cfg, *, num_blocks: int, block_size: int,
                  max_model_len: int, dtype=np.float32,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True,
+                 layer_ids: list[int] | None = None,
+                 ring_blocks: int = 0):
         self.cfg = cfg
         self.block_size = block_size
         self.num_blocks = num_blocks
+        self.ring_blocks = ring_blocks
+        plan = layer_plan(cfg)
+        if layer_ids is None:
+            layer_ids = [i for i, (mix, _f) in enumerate(plan)
+                         if mix != "ssm"]
+        self.layer_ids = list(layer_ids)
         self.max_blocks_per_seq = -(-max_model_len // block_size)
+        if ring_blocks:
+            self.max_blocks_per_seq = min(self.max_blocks_per_seq,
+                                          ring_blocks)
         self.allocator = BlockAllocator(num_blocks)
-        self.pools = M.init_paged_cache(cfg, num_blocks, block_size, dtype)
+        self.pools = []
+        for li in self.layer_ids:
+            mod = attn_block if plan[li][0] == "gqa" else mla
+            self.pools.append(mod.init_paged_state(cfg, num_blocks,
+                                                   block_size, dtype))
         self.prefix = PrefixIndex() if prefix_cache else None
         # prefix-cache counters (engine.stats surfaces these)
         self.prefix_queries = 0          # full prompt blocks walked
@@ -229,12 +268,23 @@ class BlockKVCache:
         # swap counters
         self.swap_outs = 0
         self.swap_ins = 0
-        self.swapped_blocks = 0
+        self.swapped_blocks = 0          # blocks that took the host trip
+        self.readopted_blocks = 0        # blocks re-adopted from the index
         self.swap_out_s = 0.0
         self.swap_in_s = 0.0
+        # occupancy / ring counters
+        self.blocks_allocated = 0
+        self.ring_reuses = 0             # trailing blocks recycled in place
+        self.peak_used = 0
 
     def blocks_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.block_size)
+
+    def blocks_needed(self, n_tokens: int) -> int:
+        """Physical blocks a sequence of n_tokens occupies — capped at
+        the ring size for the sliding-window layout."""
+        n = self.blocks_for(n_tokens)
+        return min(n, self.ring_blocks) if self.ring_blocks else n
 
     def reset_stats(self, *, flush_prefix: bool = False):
         """Zero the prefix/swap counters (e.g. after jit warmup);
@@ -246,7 +296,10 @@ class BlockKVCache:
         self.prefix_queries = self.prefix_hits = 0
         self.skipped_prefill_tokens = self.cow_copies = 0
         self.swap_outs = self.swap_ins = self.swapped_blocks = 0
+        self.readopted_blocks = 0
         self.swap_out_s = self.swap_in_s = 0.0
+        self.blocks_allocated = self.ring_reuses = 0
+        self.peak_used = self.allocator.num_used
 
     # ------------------------------------------------------ allocation
 
@@ -256,12 +309,23 @@ class BlockKVCache:
         if got is None and self.prefix is not None:
             self.prefix.evict(self.allocator, n - self.allocator.num_free)
             got = self.allocator.alloc(n)
+        if got is not None:
+            self.blocks_allocated += len(got)
+            self.peak_used = max(self.peak_used, self.allocator.num_used)
         return got
 
     def ensure_capacity(self, req, n_tokens: int) -> bool:
         """Grow ``req.blocks`` to cover n_tokens cache slots; False if
-        the pool cannot supply the missing blocks (caller preempts)."""
-        need = self.blocks_for(n_tokens) - len(req.blocks)
+        the pool cannot supply the missing blocks (caller preempts).
+        In ring mode growth past the window allocates nothing — the
+        trailing block is recycled in place (counted as a reuse)."""
+        virt = self.blocks_for(n_tokens)
+        if self.ring_blocks:
+            prev = max(req.virtual_blocks, self.ring_blocks)
+            if virt > prev:
+                self.ring_reuses += virt - prev
+            req.virtual_blocks = max(req.virtual_blocks, virt)
+        need = self.blocks_needed(n_tokens) - len(req.blocks)
         if need <= 0:
             return True
         got = self._alloc(need)
@@ -289,6 +353,8 @@ class BlockKVCache:
             return [], 0, ""
         bs = self.block_size
         n_full = len(prompt) // bs
+        if self.ring_blocks:
+            n_full = min(n_full, self.ring_blocks)
         blocks, parent = [], ""
         for j in range(n_full):
             key = chunk_key(parent, prompt[j * bs:(j + 1) * bs])
@@ -310,7 +376,7 @@ class BlockKVCache:
         matched, n_tok, parent = self.match_prefix(req.prompt)
         for b in matched:           # pin before _alloc may evict LRU entries
             self.allocator.incref(b)
-        need = self.blocks_for(req.prompt_len) - len(matched)
+        need = self.blocks_needed(req.prompt_len) - len(matched)
         got = self._alloc(need)
         if got is None:
             for b in matched:
@@ -321,10 +387,13 @@ class BlockKVCache:
         req.skipped_prefill = n_tok
         req.n_registered = len(matched)
         req.prefix_key = parent
+        req.virtual_blocks = self.blocks_for(req.prompt_len)
         # counted only on successful admission: a deferred request
         # re-matches every retry and would otherwise deflate hit_rate
         if self.prefix is not None:
             n_full = req.prompt_len // self.block_size
+            if self.ring_blocks:
+                n_full = min(n_full, self.ring_blocks)
             self.prefix_queries += min(len(matched) + 1, n_full)
             self.prefix_hits += len(matched)
         self.skipped_prefill_tokens += n_tok
@@ -332,11 +401,15 @@ class BlockKVCache:
 
     def register_prefix(self, req):
         """Publish req's freshly prefilled FULL prompt blocks into the
-        index (content-hash chained after the already-registered head)."""
+        index (content-hash chained after the already-registered head).
+        Ring layout: depth capped at the ring — deeper blocks get
+        overwritten as the window advances."""
         if self.prefix is None:
             return
         bs = self.block_size
         n_full = min(req.pos, req.prompt_len) // bs
+        if self.ring_blocks:
+            n_full = min(n_full, self.ring_blocks)
         while req.n_registered < n_full:
             j = req.n_registered
             key = chunk_key(req.prefix_key, req.prompt[j * bs:(j + 1) * bs])
@@ -348,7 +421,8 @@ class BlockKVCache:
     # --------------------------------------------------- copy-on-write
 
     def writable_indices(self, pos: int, n: int) -> range:
-        """Logical block indices a write of n tokens at pos touches."""
+        """Logical block indices a write of n tokens at pos touches
+        (virtual — ``make_writable`` maps them into the ring)."""
         bs = self.block_size
         return range(pos // bs, (pos + n - 1) // bs + 1)
 
@@ -356,6 +430,8 @@ class BlockKVCache:
         """Copy-on-write: if req's idx-th block is shared, move req onto
         a private copy before it is written.  False when no block is
         available for the copy (caller preempts)."""
+        if self.ring_blocks:
+            idx = idx % self.ring_blocks
         block = req.blocks[idx]
         if self.allocator.refcount(block) == 1:
             return True
@@ -374,43 +450,71 @@ class BlockKVCache:
     # ---------------------------------------------------- swap-to-host
 
     def swap_out(self, req):
-        """Move req's KV blocks to host buffers (device->host per-block
-        ``jax.device_get``) and release the device blocks.  Shared
-        blocks are copied too (their content is identical) — the device
-        side only drops req's reference."""
+        """Park req's blocks off the device.  Blocks REGISTERED in the
+        prefix index skip the D2H copy — the index keeps them resident
+        and ``swap_in`` re-adopts them by content hash.  The remaining
+        blocks go to host buffers; either way req drops every device
+        reference."""
         t0 = time.perf_counter()
-        ids = np.asarray(req.blocks, np.int32)
+        readopt = 0
+        if self.prefix is not None and req.n_registered and \
+                self.blocks_for(req.pos) <= (self.ring_blocks
+                                             or self.max_blocks_per_seq):
+            # ring wrap invalidates the leading-block <-> chain-key
+            # correspondence, so re-adoption only applies pre-wrap
+            readopt = req.n_registered
+        ids = np.asarray(req.blocks[readopt:], np.int32)
         host = []
         for pool in self.pools:
-            host.append({
-                "k": np.ascontiguousarray(jax.device_get(pool["k"][ids])),
-                "v": np.ascontiguousarray(jax.device_get(pool["v"][ids])),
-            })
+            host.append({k: np.ascontiguousarray(jax.device_get(v[ids]))
+                         for k, v in pool.items()})
         req.host_kv = host
+        req.swap_readopt = readopt
         self.allocator.free(req.blocks)
         req.blocks = []
         self.swap_outs += 1
         self.swapped_blocks += len(ids)
         self.swap_out_s += time.perf_counter() - t0
 
-    def swap_in(self, req) -> bool:
-        """Restore a swapped request: allocate fresh device blocks and
-        copy the host buffers back.  False when the pool is short."""
-        n = req.host_kv[0]["k"].shape[0]
+    def swap_in(self, req) -> bool | None:
+        """Restore a swapped request.  Registered blocks are re-adopted
+        from the prefix index (content hash -> resident block, no H2D);
+        the rest get fresh blocks + host copies.  False when the pool
+        is short; None when a registered block's chain was evicted
+        while parked — the content is gone and the caller must fall
+        back to recompute."""
+        bs = self.block_size
+        adopted, parent = [], ""
+        for j in range(req.swap_readopt):
+            key = chunk_key(parent, req.prompt[j * bs:(j + 1) * bs])
+            b = self.prefix.lookup(key) if self.prefix is not None else None
+            if b is None:
+                for a in adopted:
+                    self.allocator.decref(a)
+                return None
+            self.allocator.incref(b)
+            adopted.append(b)
+            parent = key
+        n = next(iter(req.host_kv[0].values())).shape[0]
         got = self._alloc(n)
         if got is None:
+            for a in adopted:
+                self.allocator.decref(a)
             return False
         t0 = time.perf_counter()
         for li, h in enumerate(req.host_kv):
             pool = self.pools[li]
             for j, b in enumerate(got):
-                pool = _host_restore(pool, jnp.int32(b), h["k"][j], h["v"][j])
+                pool = _host_restore(pool, jnp.int32(b),
+                                     {k: v[j] for k, v in h.items()})
             self.pools[li] = pool
         # async dispatch: sync so the timer covers the actual copies
-        jax.block_until_ready([p["k"] for p in self.pools])
-        req.blocks = got
+        jax.block_until_ready([next(iter(p.values())) for p in self.pools])
+        req.blocks = adopted + got
         req.host_kv = None
+        req.swap_readopt = 0
         self.swap_ins += 1
+        self.readopted_blocks += len(adopted)
         self.swap_in_s += time.perf_counter() - t0
         return True
 
@@ -429,3 +533,211 @@ class BlockKVCache:
                     "address them (raise max_model_len or block_size)")
             table[i, :len(r.blocks)] = r.blocks
         return table
+
+    def stats(self) -> dict:
+        cap = self.allocator.capacity
+        writes = self.ring_reuses + self.blocks_allocated
+        return {
+            "layout": "ring" if self.ring_blocks else "paged",
+            "layers": len(self.layer_ids),
+            "num_blocks": cap,
+            "used_blocks": self.allocator.num_used,
+            "peak_used_blocks": self.peak_used,
+            "occupancy": self.peak_used / cap if cap else 0.0,
+            "ring_blocks": self.ring_blocks,
+            "ring_reuses": self.ring_reuses,
+            "ring_reuse_rate": self.ring_reuses / writes if writes else 0.0,
+        }
+
+
+class MixerStateCache:
+    """Composite MixerState the engine instantiates: one block-family
+    state (paged/ring over KV or latent pools) and/or one slot-family
+    state (recurrent snapshots), dispatching per layer via
+    ``mixer_state.layer_layouts``.  Presents the combined per-layer
+    pool list the jitted steps donate, and fans every request-lifecycle
+    call out to the member states all-or-nothing."""
+
+    def __init__(self, cfg, *, num_blocks: int, block_size: int,
+                 max_model_len: int, dtype=np.float32,
+                 prefix_cache: bool = True, num_slots: int = 8,
+                 prefill_chunk: int = 16):
+        self.cfg = cfg
+        self.block_size = block_size
+        self.layouts = layer_layouts(cfg)
+        attn_ids = [i for i, l in enumerate(self.layouts)
+                    if l != LAYOUT_SLOT]
+        slot_ids = [i for i, l in enumerate(self.layouts)
+                    if l == LAYOUT_SLOT]
+        self.ring_blocks = (
+            ring_block_count(cfg.sliding_window, block_size, prefill_chunk)
+            if (attn_ids and cfg.sliding_window) else 0)
+        # recurrent state cannot be adopted mid-stream: once any layer
+        # keeps a slot, shared prompt blocks buy nothing (the slot
+        # would still have to be recomputed), so the prefix index is
+        # only enabled for pure block-family stacks
+        prefix = bool(prefix_cache and attn_ids and not slot_ids)
+        self.attn = BlockKVCache(
+            cfg, num_blocks=num_blocks, block_size=block_size,
+            max_model_len=max_model_len, dtype=dtype, prefix_cache=prefix,
+            layer_ids=attn_ids, ring_blocks=self.ring_blocks) \
+            if attn_ids else None
+        self.ssm = RecurrentSlotState(cfg, slot_ids, num_slots, dtype) \
+            if slot_ids else None
+        self.swap_outs = 0          # request-level (hybrids swap both
+        self.swap_ins = 0           # families in one event)
+
+    # ------------------------------------------------------ device pools
+
+    @property
+    def pools(self):
+        out = [None] * len(self.layouts)
+        if self.attn is not None:
+            for li, p in zip(self.attn.layer_ids, self.attn.pools):
+                out[li] = p
+        if self.ssm is not None:
+            for li, p in zip(self.ssm.layer_ids, self.ssm.pools):
+                out[li] = p
+        return out
+
+    @pools.setter
+    def pools(self, new):
+        if self.attn is not None:
+            self.attn.pools = [new[li] for li in self.attn.layer_ids]
+        if self.ssm is not None:
+            self.ssm.pools = [new[li] for li in self.ssm.layer_ids]
+
+    # ------------------------------------------------------ capacity
+
+    @property
+    def prefix(self):
+        return self.attn.prefix if self.attn is not None else None
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)
+
+    def fits(self, n_tokens: int) -> bool:
+        """Can a request of n_tokens total ever be scheduled?"""
+        return (self.attn is None
+                or self.attn.blocks_needed(n_tokens)
+                <= self.attn.allocator.capacity)
+
+    # ------------------------------------------------------ lifecycle
+
+    def alloc_prompt(self, req) -> bool:
+        if self.ssm is not None and not self.ssm.alloc_prompt(req):
+            return False
+        if self.attn is not None and not self.attn.alloc_prompt(req):
+            if self.ssm is not None:
+                self.ssm.release(req)
+            return False
+        return True
+
+    def ensure_capacity(self, req, n_tokens: int) -> bool:
+        if self.ssm is not None and \
+                not self.ssm.ensure_capacity(req, n_tokens):
+            return False
+        return self.attn is None or self.attn.ensure_capacity(req, n_tokens)
+
+    def release(self, req):
+        if self.attn is not None:
+            self.attn.release(req)
+        if self.ssm is not None:
+            self.ssm.release(req)
+
+    def make_writable(self, req, idx: int) -> bool:
+        return self.attn is None or self.attn.make_writable(req, idx)
+
+    def writable_indices(self, pos: int, n: int) -> range:
+        if self.attn is None:
+            return range(0)
+        return self.attn.writable_indices(pos, n)
+
+    def register_prefix(self, req):
+        if self.attn is not None:
+            self.attn.register_prefix(req)
+
+    def swap_out(self, req):
+        if self.attn is not None and req.blocks:
+            self.attn.swap_out(req)
+        if self.ssm is not None and req.slot is not None:
+            self.ssm.swap_out(req)
+        self.swap_outs += 1
+
+    def swap_in(self, req) -> bool | None:
+        # slot availability precheck so a block restore never has to be
+        # rolled back when the slot pool comes up short
+        if self.ssm is not None and req.slot is None \
+                and self.ssm.allocator.num_free < 1:
+            return False
+        if self.attn is not None and req.host_kv is not None:
+            ok = self.attn.swap_in(req)
+            if ok is not True:
+                return ok
+        if self.ssm is not None and req.host_state is not None:
+            restored = self.ssm.swap_in(req)
+            assert restored, "slot precheck above guarantees a free slot"
+        self.swap_ins += 1
+        return True
+
+    # ------------------------------------------------------ step arrays
+
+    @property
+    def table_width(self) -> int:
+        return self.attn.max_blocks_per_seq if self.attn is not None else 1
+
+    def table_rows(self, reqs, batch: int) -> np.ndarray:
+        if self.attn is not None:
+            return self.attn.table_rows(reqs, batch)
+        return np.zeros((batch, 1), np.int32)
+
+    def slot_rows(self, reqs, batch: int) -> np.ndarray:
+        if self.ssm is not None:
+            return self.ssm.slot_rows(reqs, batch)
+        return np.zeros(batch, np.int32)
+
+    # ------------------------------------------------------ stats
+
+    def reset_stats(self, *, flush_prefix: bool = False):
+        if self.attn is not None:
+            self.attn.reset_stats(flush_prefix=flush_prefix)
+        if self.ssm is not None:
+            self.ssm.reset_stats()
+        self.swap_outs = self.swap_ins = 0
+
+    def prefix_section(self) -> dict:
+        a = self.attn
+        enabled = a is not None and a.prefix is not None
+        return {
+            "enabled": enabled,
+            "queries": a.prefix_queries if a else 0,
+            "hits": a.prefix_hits if a else 0,
+            "hit_rate": (a.prefix_hits / a.prefix_queries
+                         if a and a.prefix_queries else 0.0),
+            "skipped_prefill_tokens": a.skipped_prefill_tokens if a else 0,
+            "cow_copies": a.cow_copies if a else 0,
+            "cached_blocks": len(a.prefix) if enabled else 0,
+            "evictions": a.prefix.evictions if enabled else 0,
+        }
+
+    def swap_section(self) -> dict:
+        a, s = self.attn, self.ssm
+        return {
+            "swap_outs": self.swap_outs,
+            "swap_ins": self.swap_ins,
+            "swapped_blocks": a.swapped_blocks if a else 0,
+            "readopted_blocks": a.readopted_blocks if a else 0,
+            "swapped_slots": s.swapped_slots if s else 0,
+            "swap_out_s": (a.swap_out_s if a else 0.0)
+                          + (s.snapshot_out_s if s else 0.0),
+            "swap_in_s": (a.swap_in_s if a else 0.0)
+                         + (s.snapshot_in_s if s else 0.0),
+        }
+
+    def mixer_section(self) -> dict:
+        fams = {}
+        if self.attn is not None:
+            fams["blocks"] = self.attn.stats()
+        if self.ssm is not None:
+            fams["slots"] = self.ssm.stats()
+        return fams

@@ -1,9 +1,12 @@
 """Photonic cost-model hook: modeled OXBNN latency for one decode token.
 
-Maps every projection GEMM of one transformer decode step onto the
-paper's XPC mapping (an FC layer: S = fan-in, V = fan-out; see
-photonic/workloads.LayerSpec) and queries the transaction-level
-simulator (photonic/simulator.simulate_layer) for per-GEMM latency.
+Maps every GEMM of one decode step — attention projections, MLA latent
+down/up-projections, and mamba2 SSD chunk matmuls (state write +
+readout contractions) — onto the paper's XPC mapping (an FC layer:
+S = fan-in, V = fan-out; see photonic/workloads.LayerSpec) and queries
+the transaction-level simulator (photonic/simulator.simulate_layer)
+for per-GEMM latency, so ``modeled_tokens_per_s`` is reported for every
+paged arch family, not just GQA stacks.
 The engine reports the resulting modeled accelerator tokens/s next to
 wall-clock tokens/s, so scheduling decisions can be judged against the
 paper's hardware rather than the host CPU/TPU.
@@ -24,13 +27,47 @@ from repro.photonic.workloads import LayerSpec, fc
 
 
 def gemm_specs(cfg) -> list[LayerSpec]:
-    """Per-token GEMMs of one decode step, as photonic FC LayerSpecs."""
+    """Per-token GEMMs of one decode step, as photonic FC LayerSpecs.
+
+    Every mixer family maps onto the XPC datapath:
+      * gqa — the four projection GEMMs;
+      * mla — q (or its low-rank pair), the latent down-projection and
+        the k/v up-projections that re-expand one token's latent, plus
+        the output projection;
+      * ssm — in/out projections, the depthwise conv tail (S = kernel
+        taps per channel), and the two SSD recurrence matmuls of one
+        token: the state write dt*(B (x) x) and the readout C . h, each
+        an ssm_state-length contraction per (head, headdim) output.
+    """
     specs: list[LayerSpec] = []
     d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     for i, (mix, f) in enumerate(layer_plan(cfg)):
         if mix == "gqa":
             specs += [fc(f"l{i}.q", d, h * dh), fc(f"l{i}.k", d, hkv * dh),
                       fc(f"l{i}.v", d, hkv * dh), fc(f"l{i}.o", h * dh, d)]
+        elif mix == "mla":
+            qk_head = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+            if cfg.q_lora_rank:
+                specs += [fc(f"l{i}.q_down", d, cfg.q_lora_rank),
+                          fc(f"l{i}.q_up", cfg.q_lora_rank, h * qk_head)]
+            else:
+                specs.append(fc(f"l{i}.q", d, h * qk_head))
+            specs += [
+                fc(f"l{i}.kv_down", d,
+                   cfg.kv_lora_rank + cfg.qk_rope_head_dim),
+                fc(f"l{i}.k_up", cfg.kv_lora_rank, h * cfg.qk_nope_head_dim),
+                fc(f"l{i}.v_up", cfg.kv_lora_rank, h * cfg.v_head_dim),
+                fc(f"l{i}.o", h * cfg.v_head_dim, d)]
+        elif mix == "ssm":
+            d_inner = cfg.ssm_expand * d
+            nh = d_inner // cfg.ssm_headdim
+            conv_ch = d_inner + 2 * cfg.ssm_state
+            specs += [
+                fc(f"l{i}.in_proj", d, 2 * d_inner + 2 * cfg.ssm_state + nh),
+                fc(f"l{i}.conv", cfg.ssm_conv, conv_ch),
+                fc(f"l{i}.ssd_state", cfg.ssm_state, d_inner),
+                fc(f"l{i}.ssd_out", cfg.ssm_state, d_inner),
+                fc(f"l{i}.out_proj", d_inner, d)]
         if f in ("dense", "moe"):
             if f == "moe":
                 # router + the ACTIVE experts a token actually traverses

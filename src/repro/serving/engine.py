@@ -8,8 +8,15 @@ joins a running batch without draining it (continuous batching).
 Compile discipline: the decode batch is padded to power-of-two buckets
 (at most log2(max_batch)+1 shapes) and prefill always runs at the fixed
 (1, prefill_chunk) shape, so steady-state serving never re-jits.  The
-paged pools are donated into every call — XLA updates the KV blocks in
-place instead of double-buffering the whole cache.
+mixer-state pools are donated into every call — XLA updates the touched
+blocks/slots in place instead of double-buffering the whole cache.
+
+Every mixer family schedules through the same MixerState protocol
+(serving/mixer_state.py): full-attention stacks page KV blocks, MLA
+stacks page compressed latents, sliding-window stacks run ring-buffer
+block tables, and SSM stacks keep one recurrent slot per request — the
+engine just passes (block_table, lengths, slots) into the jitted steps
+and each layer reads what its layout needs.
 
 With cfg.precision == "bnn" every projection runs the packed
 XNOR-popcount GEMM — the paper's inference mode — and the attached
@@ -26,7 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import transformer as M
-from repro.serving.block_cache import BlockKVCache
+from repro.serving.block_cache import MixerStateCache
 from repro.serving.cost_model import PhotonicCostModel
 from repro.serving.request import Request, State
 from repro.serving.scheduler import Scheduler, SchedulerConfig
@@ -45,21 +52,21 @@ class EngineConfig:
     accelerator: str = "OXBNN_50"    # photonic cost-model target
     prefix_cache: bool = True        # content-addressed prompt block reuse
     preempt_policy: str = "swap"     # swap | recompute (fallback)
+    num_slots: int = 0               # recurrent slots; 0 = max_batch + 1
 
 
 class Engine:
     def __init__(self, params, cfg, ecfg: EngineConfig = EngineConfig()):
-        if not M.paged_compatible(cfg):
-            raise NotImplementedError(
-                f"{cfg.name}: paged serving needs a full-attention GQA "
-                "stack (use launch.serve legacy mode for SSM/MLA/SWA)")
         self.params = params
         self.cfg = cfg
         self.ecfg = ecfg
-        self.cache = BlockKVCache(cfg, num_blocks=ecfg.num_blocks,
-                                  block_size=ecfg.block_size,
-                                  max_model_len=ecfg.max_model_len,
-                                  prefix_cache=ecfg.prefix_cache)
+        self.cache = MixerStateCache(
+            cfg, num_blocks=ecfg.num_blocks,
+            block_size=ecfg.block_size,
+            max_model_len=ecfg.max_model_len,
+            prefix_cache=ecfg.prefix_cache,
+            num_slots=ecfg.num_slots or ecfg.max_batch + 1,
+            prefill_chunk=ecfg.prefill_chunk)
         self.scheduler = Scheduler(
             SchedulerConfig(max_batch=ecfg.max_batch,
                             max_tokens_in_flight=ecfg.max_tokens_in_flight,
@@ -77,15 +84,17 @@ class Engine:
         self._prefilled = 0
         self._max_concurrent = 0
 
-        cfg_ = cfg  # closure constant (static); params/pools stay args
+        cfg_ = cfg  # closure constants (static); params/pools stay args
+        ring_ = self.cache.ring_blocks > 0
 
-        def _prefill(params, pools, tokens, table, lengths, n_valid):
+        def _prefill(params, pools, tokens, table, lengths, n_valid, slots):
             return M.prefill_chunk(params, cfg_, tokens, pools, table,
-                                   lengths, n_valid)
+                                   lengths, n_valid, slots, ring=ring_)
 
-        def _decode(params, pools, tokens, table, lengths, active):
+        def _decode(params, pools, tokens, table, lengths, active, slots):
             logits, pools = M.paged_decode_step(params, cfg_, tokens, pools,
-                                                table, lengths, active)
+                                                table, lengths, active,
+                                                slots, ring=ring_)
             return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), \
                 logits, pools
 
@@ -101,8 +110,7 @@ class Engine:
             raise ValueError(
                 f"request needs {prompt.size + max_new} tokens > "
                 f"max_model_len={self.ecfg.max_model_len}")
-        if self.cache.blocks_for(prompt.size + max_new) \
-                > self.cache.allocator.capacity:
+        if not self.cache.fits(prompt.size + max_new):
             raise ValueError(
                 f"request needs {prompt.size + max_new} tokens of KV > "
                 f"the whole block pool; raise num_blocks")
@@ -157,10 +165,11 @@ class Engine:
         tokens = np.zeros((1, cp), np.int32)
         tokens[0, :chunk] = req.prompt[req.pos:req.pos + chunk]
         table = self.cache.table_rows([req], 1)
+        slots = self.cache.slot_rows([req], 1)
         logits, pools = self._prefill_fn(
             self.params, self.cache.pools, jnp.asarray(tokens),
             jnp.asarray(table), jnp.asarray([req.pos], jnp.int32),
-            jnp.asarray([chunk], jnp.int32))
+            jnp.asarray([chunk], jnp.int32), jnp.asarray(slots))
         self.cache.pools = pools
         req.pos += chunk
         self._prefilled += chunk
@@ -209,9 +218,11 @@ class Engine:
             lengths[i] = r.pos
             active[i] = True
         table = self.cache.table_rows(ready, bucket)
+        slots = self.cache.slot_rows(ready, bucket)
         next_tok, _, pools = self._decode_fn(
             self.params, self.cache.pools, jnp.asarray(tokens),
-            jnp.asarray(table), jnp.asarray(lengths), jnp.asarray(active))
+            jnp.asarray(table), jnp.asarray(lengths), jnp.asarray(active),
+            jnp.asarray(slots))
         self.cache.pools = pools
         next_tok = np.asarray(next_tok)
         self._max_concurrent = max(self._max_concurrent, len(ready))
@@ -249,6 +260,7 @@ class Engine:
             return lat[min(int(p / 100 * len(lat)), len(lat) - 1)]
 
         c = self.cache
+        prefix = c.prefix_section()
         return {
             "steps": self.step_count,
             "finished": len(finished),
@@ -261,30 +273,14 @@ class Engine:
             "p99_latency_s": pct(99),
             "max_concurrent_decode": self._max_concurrent,
             "preemptions": sum(r.preemptions for r in self.requests.values()),
-            "prefix_cache": {
-                "enabled": c.prefix is not None,
-                "queries": c.prefix_queries,
-                "hits": c.prefix_hits,
-                "hit_rate": (c.prefix_hits / c.prefix_queries
-                             if c.prefix_queries else 0.0),
-                "skipped_prefill_tokens": c.skipped_prefill_tokens,
-                "cow_copies": c.cow_copies,
-                "cached_blocks": len(c.prefix) if c.prefix is not None else 0,
-                "evictions": (c.prefix.evictions
-                              if c.prefix is not None else 0),
-            },
-            "swap": {
-                "swap_outs": c.swap_outs,
-                "swap_ins": c.swap_ins,
-                "swapped_blocks": c.swapped_blocks,
-                "swap_out_s": c.swap_out_s,
-                "swap_in_s": c.swap_in_s,
-            },
+            "prefix_cache": prefix,
+            "swap": c.swap_section(),
+            "mixer": c.mixer_section(),
             "photonic": {
                 **self.cost_model.report(),
                 **self.cost_model.serving_report(
                     prefill_tokens=self._prefilled,
                     decode_tokens=self._decoded,
-                    skipped_tokens=c.skipped_prefill_tokens),
+                    skipped_tokens=prefix["skipped_prefill_tokens"]),
             },
         }

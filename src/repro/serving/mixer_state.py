@@ -1,0 +1,234 @@
+"""MixerState: pluggable per-request cache layouts for the engine.
+
+The serving engine schedules heterogeneous mixer stacks through ONE
+protocol.  Every layout answers the same request-lifecycle calls
+(``MixerState`` below); the engine and scheduler never branch on the
+architecture family.  Three concrete layouts exist:
+
+  * **paged KV / latent blocks** (``block_cache.BlockKVCache`` with
+    ``ring_blocks=0``) — full-attention GQA stacks page per-head K/V
+    token blocks; MLA stacks page compressed (c_kv, k_rope) latent
+    blocks.  Refcounts, prefix cache, copy-on-write and swap-to-host
+    all operate on physical block ids.
+
+  * **ring-buffer block tables** (``BlockKVCache`` with
+    ``ring_blocks=N``) — sliding-window attention (and windowed MLA)
+    wraps the logical block index modulo a window-sized table, so the
+    trailing block is recycled to the front as the window advances and
+    a request's block list never exceeds the window.  Prefix-index
+    depth is capped at the ring (blocks past the window get
+    overwritten, so only the head of the prompt is ever shareable).
+
+  * **per-slot recurrent snapshots** (``RecurrentSlotState``) — SSM
+    (mamba2 SSD) layers keep O(1) state per request: one slot in a
+    fixed pool holding (hidden state, conv tail).  There is no block
+    table and nothing pages; swap/preempt snapshots the whole slot to
+    host and back.
+
+``layer_layouts`` assigns one layout per layer from the arch config, so
+hybrid stacks (jamba: SSD + periodic attention) compose layouts — the
+composite cache in ``block_cache.MixerStateCache`` owns one
+block-family state and/or one slot-family state and fans the calls out.
+"""
+from __future__ import annotations
+
+import abc
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.layers import mamba2
+from repro.models.transformer import layer_plan
+
+LAYOUT_PAGED = "paged"     # unbounded block table (full attention)
+LAYOUT_RING = "ring"       # window-sized circular block table
+LAYOUT_SLOT = "slot"       # per-request recurrent state slot
+
+
+def layer_layouts(cfg) -> list[str]:
+    """One mixer-state layout per layer (plan order)."""
+    out = []
+    for mix, _f in layer_plan(cfg):
+        if mix == "ssm":
+            out.append(LAYOUT_SLOT)
+        elif cfg.sliding_window:
+            out.append(LAYOUT_RING)
+        else:
+            out.append(LAYOUT_PAGED)
+    return out
+
+
+def ring_block_count(window: int, block_size: int,
+                     prefill_chunk: int) -> int:
+    """Blocks a sliding-window ring table needs.
+
+    The ring must still hold every key a query can attend AFTER a full
+    prefill chunk lands: the first chunk query at position L needs keys
+    back to L - window + 1 while the newest write sits at
+    L + chunk - 1, so capacity >= window + chunk - 1 tokens.
+    """
+    return -(-(window + max(prefill_chunk, 1) - 1) // block_size)
+
+
+class MixerState(abc.ABC):
+    """Request-lifecycle protocol every mixer-state layout implements.
+
+    A layout owns the device pools for ITS layers plus whatever
+    bookkeeping maps a request onto them (block lists, slot ids).  The
+    scheduler/engine drive requests exclusively through these calls;
+    "no capacity" is always reported by returning False so the caller
+    can preempt, never by raising.
+    """
+
+    @abc.abstractmethod
+    def alloc_prompt(self, req) -> bool:
+        """Admission-time allocation for req's prompt (all-or-nothing)."""
+
+    @abc.abstractmethod
+    def ensure_capacity(self, req, n_tokens: int) -> bool:
+        """Grow req's state to cover n_tokens; False under pressure."""
+
+    @abc.abstractmethod
+    def release(self, req):
+        """Drop req's references; state becomes reclaimable."""
+
+    @abc.abstractmethod
+    def swap_out(self, req):
+        """Park req's state on host; device references drop."""
+
+    @abc.abstractmethod
+    def swap_in(self, req) -> bool | None:
+        """Restore req's state.  True = resumed; False = retry later
+        (pool short); None = content lost, caller must recompute."""
+
+    def make_writable(self, req, idx: int) -> bool:
+        """Copy-on-write hook (block layouts); slots are never shared."""
+        return True
+
+    def writable_indices(self, pos: int, n: int) -> range:
+        """Logical indices a write of n tokens at pos touches."""
+        return range(0)
+
+
+# Slot-pool device updates follow the same donation discipline as the
+# engine steps: the old pool buffer is donated so XLA updates one slot
+# in place instead of double-buffering the whole pool.
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _slot_zero(pool, slot):
+    return {k: v.at[slot].set(0.0) for k, v in pool.items()}
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _slot_restore(pool, slot, host):
+    return {k: v.at[slot].set(host[k]) for k, v in pool.items()}
+
+
+class RecurrentSlotState(MixerState):
+    """Per-slot recurrent snapshots: the SSM mixer-state layout.
+
+    Pool shape per layer: (num_slots, ...) SSD hidden state + conv
+    tail.  Slot 0 is reserved scratch (padded batch rows write there).
+    A request owns exactly one slot for its whole life, regardless of
+    sequence length; slots are zeroed on allocation (the previous
+    owner's state is arbitrary) and snapshotted whole on swap.
+    """
+
+    def __init__(self, cfg, layer_ids: list[int], num_slots: int,
+                 dtype=np.float32):
+        # BlockAllocator gives the same reserved-id-0 free-list +
+        # invariant checking a slot pool needs (slots are just blocks
+        # that are never shared)
+        from repro.serving.block_cache import BlockAllocator
+        self.cfg = cfg
+        self.layer_ids = list(layer_ids)
+        self.num_slots = num_slots
+        self.allocator = BlockAllocator(num_slots)
+        self.pools = [mamba2.init_paged_state(cfg, num_slots, dtype)
+                      for _ in self.layer_ids]
+        self.peak_used = 0
+        self.snapshot_out_s = 0.0
+        self.snapshot_in_s = 0.0
+        self.swapped_slots = 0
+
+    def reset_stats(self):
+        self.peak_used = 0
+        self.snapshot_out_s = self.snapshot_in_s = 0.0
+        self.swapped_slots = 0
+
+    # ------------------------------------------------------- lifecycle
+
+    def alloc_prompt(self, req) -> bool:
+        return self.ensure_capacity(req, req.prompt_len)
+
+    def ensure_capacity(self, req, n_tokens: int) -> bool:
+        return self._alloc_slot(req, zero=True)
+
+    def _alloc_slot(self, req, *, zero: bool) -> bool:
+        """Give req a slot if it lacks one.  ``zero`` wipes the previous
+        owner's state; a swap_in skips it (the restore overwrites the
+        whole slot anyway)."""
+        if req.slot is not None:
+            return True
+        got = self.allocator.alloc(1)
+        if got is None:
+            return False
+        req.slot = got[0]
+        if zero:
+            slot = jnp.int32(req.slot)
+            for li in range(len(self.pools)):
+                self.pools[li] = _slot_zero(self.pools[li], slot)
+        self.peak_used = max(self.peak_used, self.allocator.num_used)
+        return True
+
+    def release(self, req):
+        if req.slot is not None:
+            self.allocator.free([req.slot])
+            req.slot = None
+
+    def swap_out(self, req):
+        t0 = time.perf_counter()
+        s = req.slot
+        req.host_state = [
+            {k: np.ascontiguousarray(jax.device_get(v[s]))
+             for k, v in pool.items()}
+            for pool in self.pools]
+        self.release(req)
+        self.swapped_slots += 1
+        self.snapshot_out_s += time.perf_counter() - t0
+
+    def swap_in(self, req) -> bool:
+        if not self._alloc_slot(req, zero=False):
+            return False
+        t0 = time.perf_counter()
+        slot = jnp.int32(req.slot)
+        for li, host in enumerate(req.host_state):
+            self.pools[li] = _slot_restore(self.pools[li], slot, host)
+        jax.block_until_ready([p["h"] for p in self.pools])
+        req.host_state = None
+        self.snapshot_in_s += time.perf_counter() - t0
+        return True
+
+    # ------------------------------------------------------------ step
+
+    def slot_rows(self, reqs, batch: int) -> np.ndarray:
+        """(batch,) slot ids; padded rows point at scratch slot 0."""
+        slots = np.zeros(batch, np.int32)
+        for i, r in enumerate(reqs):
+            slots[i] = 0 if r.slot is None else r.slot
+        return slots
+
+    def stats(self) -> dict:
+        cap = self.allocator.capacity
+        return {
+            "layout": LAYOUT_SLOT,
+            "layers": len(self.layer_ids),
+            "num_slots": cap,
+            "used_slots": self.allocator.num_used,
+            "peak_used_slots": self.peak_used,
+            "occupancy": self.peak_used / cap if cap else 0.0,
+            "swapped_slots": self.swapped_slots,
+        }

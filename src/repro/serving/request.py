@@ -38,16 +38,21 @@ class Request:
 
     # runtime (owned by the scheduler/engine)
     state: State = State.QUEUED
-    pos: int = 0                       # tokens written to the KV cache
+    pos: int = 0                       # tokens written to the mixer state
     out: list[int] = field(default_factory=list)
-    blocks: list[int] = field(default_factory=list)
+    blocks: list[int] = field(default_factory=list)   # block-family layers
+    slot: int | None = None            # recurrent-slot-family layers
     preemptions: int = 0
     # prefix-cache bookkeeping (owned by BlockKVCache)
     skipped_prefill: int = 0           # prompt tokens adopted from the index
     n_registered: int = 0              # full prompt blocks published
     prefix_key: str = ""               # hash-chain key of the last one
-    # swap-to-host: per-layer {"k","v"} host copies of owned blocks
+    virtual_blocks: int = 0            # logical high-water (ring reuse stat)
+    # swap-to-host: per-layer host copies of owned blocks (block family)
     host_kv: list | None = None
+    swap_readopt: int = 0              # leading blocks to re-adopt by hash
+    # swap-to-host: per-layer slot snapshots (recurrent family)
+    host_state: list | None = None
     # step/time marks for latency accounting
     submit_step: int | None = None
     admit_step: int | None = None
@@ -81,10 +86,14 @@ class Request:
         self.pos = 0
         self.out.clear()
         self.blocks = []
+        self.slot = None
         self.host_kv = None
+        self.host_state = None
+        self.swap_readopt = 0
         self.skipped_prefill = 0
         self.n_registered = 0
         self.prefix_key = ""
+        self.virtual_blocks = 0
         self.preemptions += 1
 
     def park_swapped(self):

@@ -28,7 +28,6 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-from repro.serving.block_cache import BlockKVCache
 from repro.serving.request import Request, State
 
 
@@ -55,7 +54,10 @@ class StepPlan:
 
 
 class Scheduler:
-    def __init__(self, cfg: SchedulerConfig, cache: BlockKVCache):
+    def __init__(self, cfg: SchedulerConfig, cache):
+        # ``cache`` implements the MixerState request-lifecycle calls
+        # (BlockKVCache for block-only stacks, MixerStateCache for the
+        # general composite) — the scheduler never sees layouts.
         if cfg.preempt_policy not in ("swap", "recompute"):
             raise ValueError(f"unknown preempt_policy {cfg.preempt_policy}")
         self.cfg = cfg
@@ -100,17 +102,27 @@ class Scheduler:
                 self._ev(step, "defer", req.rid, reason="token_budget")
                 break
             if req.state == State.SWAPPED:
-                if not self.cache.swap_in(req):
+                ok = self.cache.swap_in(req)
+                if ok is None:
+                    # a re-adoptable block's hash chain was evicted
+                    # while the request was parked: the content is
+                    # gone, fall back to recompute-from-scratch (the
+                    # request stays in this admission pass as QUEUED)
+                    req.reset_for_requeue()
+                    self._ev(step, "swap_lost", req.rid,
+                             preemptions=req.preemptions)
+                elif not ok:
                     self._ev(step, "defer", req.rid, reason="no_blocks")
                     break
-                req.state = (State.DECODE if req.pos >= req.prompt_len
-                             else State.PREFILL)
-                self.queue.remove(req)
-                self.running.append(req)
-                plan.admitted.append(req)
-                self._ev(step, "swap_in", req.rid, pos=req.pos,
-                         blocks=len(req.blocks))
-                continue
+                else:
+                    req.state = (State.DECODE if req.pos >= req.prompt_len
+                                 else State.PREFILL)
+                    self.queue.remove(req)
+                    self.running.append(req)
+                    plan.admitted.append(req)
+                    self._ev(step, "swap_in", req.rid, pos=req.pos,
+                             blocks=len(req.blocks))
+                    continue
             if not self.cache.alloc_prompt(req):
                 self._ev(step, "defer", req.rid, reason="no_blocks")
                 break

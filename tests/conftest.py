@@ -31,3 +31,26 @@ def bnn_params(bnn_cfg):
     from repro.models import transformer as M
     params, _ = M.init(jax.random.PRNGKey(0), bnn_cfg)
     return params
+
+
+# one reduced model per non-GQA mixer family (the paged engine's other
+# three state layouts): recurrent slots, paged latents, ring buffers
+FAMILY_ARCHS = {
+    "ssm": "mamba2-1.3b",
+    "mla": "deepseek-v2-lite-16b",
+    "swa": "mixtral-8x7b",
+}
+
+
+@pytest.fixture(scope="session")
+def family_models():
+    """family key -> (reduced bnn-precision cfg, params)."""
+    from repro import configs
+    from repro.configs.base import reduced
+    from repro.models import transformer as M
+    out = {}
+    for fam, arch in FAMILY_ARCHS.items():
+        cfg = reduced(configs.get_config(arch)).replace(precision="bnn")
+        params, _ = M.init(jax.random.PRNGKey(0), cfg)
+        out[fam] = (cfg, params)
+    return out

@@ -1,16 +1,37 @@
 """Prefix caching + swap-to-host: cache-level unit tests and engine
-differential tests.
+differential tests, across every mixer-state layout.
 
 The differential contract: greedy outputs are TOKEN-IDENTICAL with
-prefix caching on vs off, and under forced swap-to-host preemption vs
-recompute-on-resume — caching and preemption policy change cost, never
-results.
+prefix caching on vs off, under forced swap-to-host preemption vs
+recompute-on-resume, and paged-engine vs legacy-loop for one arch per
+mixer family (recurrent slots, paged latents, ring buffers) — caching,
+layout, and preemption policy change cost, never results.
 """
+import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.models import transformer as M
 from repro.serving import BlockKVCache, Request, State
 from test_serving import _engine  # bnn_cfg/bnn_params live in conftest.py
+
+
+def legacy_greedy(cfg, params, prompts, gen):
+    """Token-by-token dense-slot oracle (mirrors serve_legacy without
+    the mesh setup)."""
+    batch, plen = prompts.shape
+    max_len = plen + gen
+    caches = M.init_cache(cfg, batch, max_len)
+    decode = jax.jit(lambda p, c, tok, ln: M.decode_step(p, cfg, tok, c, ln))
+    tok = jnp.asarray(prompts[:, :1])
+    out = [tok]
+    for i in range(max_len - 1):
+        logits, caches = decode(params, caches, tok, jnp.int32(i))
+        tok = (jnp.asarray(prompts[:, i + 1:i + 2]) if i + 1 < plen
+               else jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32))
+        out.append(tok)
+    return np.concatenate(out, axis=1)
 
 
 def _cache(cfg, **kw):
@@ -234,6 +255,137 @@ def test_differential_prefix_and_preempt_policies(bnn_cfg, bnn_params):
     for a, b, c in zip(s_out, r_out, c_out):
         np.testing.assert_array_equal(a, b)
         np.testing.assert_array_equal(a, c)
+
+
+# ----------------------------------------- mixer-family differentials
+
+
+@pytest.mark.parametrize("family", ["ssm", "mla", "swa"])
+def test_paged_engine_matches_legacy_per_family(family_models, family):
+    """The paged engine reproduces the legacy loop token-for-token for
+    every mixer-state layout (slots, latents, ring buffers)."""
+    cfg, params = family_models[family]
+    rng = np.random.default_rng(3)
+    prompts = rng.integers(0, cfg.vocab, (2, 7), dtype=np.int32)
+    gen = 6
+    want = legacy_greedy(cfg, params, prompts, gen)
+    eng = _engine(cfg, params, max_model_len=16, max_batch=2)
+    rids = [eng.submit(prompts[b], gen) for b in range(2)]
+    out = eng.run()
+    np.testing.assert_array_equal(np.stack([out[r] for r in rids]), want)
+
+
+# the recompute-policy cells for mla/swa add coverage but no new
+# mechanism (recompute is layout-agnostic); ssm+recompute stays fast —
+# it is the one guarding slot re-zeroing on reallocation
+@pytest.mark.parametrize("family,policy", [
+    ("ssm", "swap"), ("ssm", "recompute"), ("mla", "swap"), ("swa", "swap"),
+    pytest.param("mla", "recompute", marks=pytest.mark.slow),
+    pytest.param("swa", "recompute", marks=pytest.mark.slow),
+])
+def test_forced_preempt_cycle_per_family(family_models, family, policy):
+    """A forced mid-flight preempt/swap cycle leaves greedy tokens
+    identical to a pressure-free run for every layout — slot snapshots,
+    latent-block host trips, and ring tables all restore exactly (and
+    the recompute path re-zeroes reallocated slots)."""
+    cfg, params = family_models[family]
+    rng = np.random.default_rng(4)
+    prompts = rng.integers(0, cfg.vocab, (2, 7), dtype=np.int32)
+    kw = dict(max_model_len=16, max_batch=2, preempt_policy=policy)
+
+    calm = _engine(cfg, params, **kw)
+    crids = [calm.submit(prompts[b], 6) for b in range(2)]
+    ref = calm.run()
+
+    eng = _engine(cfg, params, **kw)
+    rids = [eng.submit(prompts[b], 6) for b in range(2)]
+    for _ in range(6):                        # both mid-generation
+        eng.step()
+    eng.scheduler._preempt_one(eng.step_count, None)
+    out = eng.run()
+    sw = eng.stats()["swap"]
+    if policy == "swap":
+        assert sw["swap_outs"] >= 1 and sw["swap_ins"] >= 1
+        if family == "ssm":
+            assert sw["swapped_slots"] >= 1
+        else:
+            assert sw["swapped_blocks"] + sw["readopted_blocks"] >= 1
+    else:
+        assert eng.stats()["preemptions"] >= 1 and sw["swap_outs"] == 0
+    for r, c in zip(rids, crids):
+        np.testing.assert_array_equal(out[r], ref[c])
+
+
+def test_ring_wrap_matches_legacy(bnn_cfg, bnn_params):
+    """Generation far past a tiny sliding window: the ring recycles
+    trailing blocks in place and still reproduces the legacy ring
+    loop's tokens exactly."""
+    cfg = bnn_cfg.replace(sliding_window=5)
+    rng = np.random.default_rng(5)
+    prompts = rng.integers(0, cfg.vocab, (2, 9), dtype=np.int32)
+    gen = 14                                   # wraps the 5-token window
+    want = legacy_greedy(cfg, bnn_params, prompts, gen)
+    eng = _engine(cfg, bnn_params, block_size=2, num_blocks=65,
+                  max_batch=2, max_model_len=24)
+    rids = [eng.submit(prompts[b], gen) for b in range(2)]
+    out = eng.run()
+    np.testing.assert_array_equal(np.stack([out[r] for r in rids]), want)
+    blk = eng.stats()["mixer"]["blocks"]
+    assert blk["layout"] == "ring" and blk["ring_reuses"] > 0
+    assert blk["ring_reuse_rate"] > 0
+
+
+# ----------------------------------------------- swap-in re-adoption
+
+
+def _swap_mid_prefill(bnn_cfg, bnn_params):
+    """Engine with one request swapped out after registering two full
+    prompt blocks (prefix on, bs=2, prompt=7 -> pos 4 registered)."""
+    eng = _engine(bnn_cfg, bnn_params, block_size=2, num_blocks=33,
+                  max_batch=2, max_model_len=16, prefill_chunk=4,
+                  preempt_policy="swap")
+    rng = np.random.default_rng(6)
+    prompt = rng.integers(0, bnn_cfg.vocab, 7)
+    rid = eng.submit(prompt, 5)
+    eng.step()                                 # admit + first chunk
+    req = eng.requests[rid]
+    assert req.pos == 4 and req.n_registered == 2
+    eng.scheduler._preempt_one(eng.step_count, None)
+    assert req.state == State.SWAPPED and req.swap_readopt == 2
+    return eng, rid, prompt
+
+
+def test_swap_in_readopts_index_resident_blocks(bnn_cfg, bnn_params):
+    """Satellite (ROADMAP): resuming a swapped request re-adopts blocks
+    still resident in the PrefixIndex by content hash instead of the
+    D2H/H2D round-trip, and the tokens match a pressure-free run."""
+    eng, rid, prompt = _swap_mid_prefill(bnn_cfg, bnn_params)
+    out = eng.run()
+    sw = eng.stats()["swap"]
+    assert sw["readopted_blocks"] == 2         # skipped the host trip
+    # only the unregistered tail (prompt blocks 2-3 of 4) went to host
+    assert sw["swapped_blocks"] == 2
+    calm = _engine(bnn_cfg, bnn_params, max_model_len=16)
+    crid = calm.submit(prompt, 5)
+    np.testing.assert_array_equal(out[rid], calm.run()[crid])
+
+
+def test_swap_lost_chain_falls_back_to_recompute(bnn_cfg, bnn_params):
+    """If the re-adoptable hash chain was evicted while the request was
+    parked, swap_in reports the loss, the scheduler requeues the
+    request as a recompute, and the final tokens are unchanged."""
+    eng, rid, prompt = _swap_mid_prefill(bnn_cfg, bnn_params)
+    attn = eng.cache.attn
+    attn.prefix.evict(attn.allocator, len(attn.prefix))
+    assert len(attn.prefix) == 0               # chain gone
+    out = eng.run()
+    trace = eng.scheduler.trace
+    assert any(e["event"] == "swap_lost" and e["rid"] == rid
+               for e in trace)
+    calm = _engine(bnn_cfg, bnn_params, max_model_len=16)
+    crid = calm.submit(prompt, 5)
+    np.testing.assert_array_equal(out[rid], calm.run()[crid])
+    eng.cache.attn.allocator.check()           # no refs leaked
 
 
 def test_swapped_request_resumes_without_recompute(bnn_cfg, bnn_params):

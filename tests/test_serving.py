@@ -1,8 +1,8 @@
 """Continuous-batching engine tests: block allocator invariants,
 scheduler admission/eviction under budgets, chunked-prefill logit
-equivalence, engine-vs-legacy greedy token equivalence, and the
-continuous-batching trace assertion (mid-stream admission with >= 2
-concurrent decodes)."""
+equivalence, engine-vs-legacy greedy token equivalence (one arch per
+mixer family), mixer-state layout planning, and the continuous-batching
+trace assertion (mid-stream admission with >= 2 concurrent decodes)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -11,7 +11,8 @@ import pytest
 from repro.models import transformer as M
 from repro.serving import (BlockAllocator, BlockKVCache, Engine,
                            EngineConfig, PhotonicCostModel, Request,
-                           Scheduler, SchedulerConfig, State)
+                           Scheduler, SchedulerConfig, State,
+                           layer_layouts, ring_block_count)
 
 
 # bnn_cfg / bnn_params come from tests/conftest.py (shared with
@@ -136,7 +137,7 @@ def test_chunked_prefill_logit_equivalent_to_full_forward(bnn_cfg,
     prompt = jax.random.randint(jax.random.PRNGKey(3), (1, 13), 0, cfg.vocab)
     ref = np.asarray(M.logits_fn(params, cfg, {"tokens": prompt}))
 
-    caches = M.init_paged_cache(cfg, num_blocks=8, block_size=4)
+    caches = M.init_paged_state(cfg, num_blocks=8, block_size=4)
     table = jnp.array([[1, 2, 3, 4]], jnp.int32)
     chunk = 5
     got, pos = [], 0
@@ -164,6 +165,22 @@ def test_engine_matches_legacy_serve_greedy():
     got = serve("bnn-lm-100m", engine="paged", verbose=False, **kw)
     want = serve("bnn-lm-100m", engine="legacy", **kw)
     assert got.shape == want.shape == (2, 8)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.slow  # serve() end-to-end per arch; engine-level family
+# differentials run fast in tests/test_prefix_swap.py
+@pytest.mark.parametrize("arch", ["mamba2-1.3b", "deepseek-v2-lite-16b",
+                                  "mixtral-8x7b"])
+def test_serve_paged_matches_legacy_all_families(arch):
+    """Acceptance: launch/serve.py --engine paged runs every mixer
+    family (smoke shapes) with no legacy fallback, greedy tokens
+    identical to the legacy oracle."""
+    from repro.launch.serve import serve
+    kw = dict(smoke=True, batch=2, prompt_len=5, gen=5, precision="bnn")
+    got = serve(arch, engine="paged", verbose=False, **kw)
+    want = serve(arch, engine="legacy", **kw)
+    assert got.shape == want.shape == (2, 10)
     np.testing.assert_array_equal(got, want)
 
 
@@ -226,7 +243,73 @@ def test_engine_rejects_oversized_request(bnn_cfg, bnn_params):
         eng.submit(np.zeros(16, np.int32), 16)   # > whole block pool
 
 
+# ------------------------------------------------------- mixer layouts
+
+
+def test_layer_layouts_per_family(family_models, bnn_cfg):
+    """Every arch family maps onto the expected mixer-state layouts;
+    hybrids mix per layer."""
+    from repro import configs
+    from repro.configs.base import reduced
+
+    assert set(layer_layouts(bnn_cfg)) == {"paged"}
+    ssm_cfg, mla_cfg, swa_cfg = (family_models[k][0]
+                                 for k in ("ssm", "mla", "swa"))
+    assert set(layer_layouts(ssm_cfg)) == {"slot"}
+    assert set(layer_layouts(mla_cfg)) == {"paged"}
+    assert set(layer_layouts(swa_cfg)) == {"ring"}
+    jamba = reduced(configs.get_config("jamba-1.5-large-398b"))
+    plan = layer_layouts(jamba)
+    assert set(plan) == {"slot", "paged"} and plan.count("paged") == 1
+
+
+def test_ring_block_count_holds_a_full_chunk():
+    """Ring capacity must cover window + chunk - 1 tokens: the first
+    query of a freshly landed chunk still sees its whole window."""
+    for window, bs, chunk in [(4, 2, 4), (32, 16, 16), (5, 2, 4),
+                              (1, 4, 4), (4096, 16, 16)]:
+        rb = ring_block_count(window, bs, chunk)
+        assert rb * bs >= window + chunk - 1
+        assert (rb - 1) * bs < window + chunk - 1   # and is tight
+
+
+def test_ring_capacity_caps_block_demand(family_models):
+    """A sliding-window sequence longer than the window only ever
+    occupies ring_blocks physical blocks."""
+    cfg, params = family_models["swa"]
+    assert cfg.sliding_window == 32
+    eng = _engine(cfg, params, block_size=4, num_blocks=41,
+                  max_model_len=64, prefill_chunk=8)
+    # 64 tokens would need 16 flat blocks; the ring needs
+    # ceil((32+8-1)/4) = 10 regardless of sequence length
+    assert eng.cache.ring_blocks == 10
+    assert eng.cache.attn.blocks_needed(64) == 10
+    assert eng.cache.fits(64)
+    with pytest.raises(ValueError):
+        eng.submit(np.zeros(33, np.int32), 32)      # > max_model_len
+
+
 # --------------------------------------------------------- photonic hook
+
+
+def test_photonic_cost_model_covers_all_families(family_models):
+    """Satellite: modeled OXBNN tokens/s is reported for SSD chunk
+    matmuls and MLA latent projections, not just GQA GEMMs."""
+    ssm_cfg = family_models["ssm"][0]
+    rep = PhotonicCostModel(ssm_cfg, "OXBNN_50").report()
+    # reduced mamba2: 2 layers x (in_proj, conv, ssd_state, ssd_out,
+    # out_proj), no FFN, + head
+    assert rep["n_gemms"] == 2 * 5 + 1
+    assert np.isfinite(rep["modeled_tokens_per_s"])
+
+    mla_cfg = family_models["mla"][0]
+    rep = PhotonicCostModel(mla_cfg, "OXBNN_50").report()
+    # per MLA layer: q, kv_down, k_up, v_up, o; layer 0 dense swiglu
+    # (3 GEMMs), layer 1 moe (router + active experts x 3), + head
+    active = mla_cfg.top_k + mla_cfg.n_shared_experts
+    assert rep["n_gemms"] == (5 + 3) + (5 + 1 + active * 3) + 1
+    assert np.isfinite(rep["modeled_tokens_per_s"])
+
 
 def test_photonic_cost_model_report(bnn_cfg):
     cm = PhotonicCostModel(bnn_cfg, "OXBNN_50")
