@@ -7,9 +7,13 @@ prefix caching exploits.  The arch table covers one row per mixer
 family — paged-KV (dense GQA), recurrent slots (mamba2), paged latents
 (deepseek MLA), ring buffers (mixtral SWA).  Reported per arch:
 
-  * wall-clock generated tokens/s
-  * p50 / p99 request latency (arrival -> last token)
+  * wall-clock decode and total (prefill+decode) tokens/s
+  * nearest-rank p50 / p99 request latency (arrival -> last token)
   * max concurrent decode rows (continuous batching actually engaged)
+  * speculative-decode draft acceptance rate, committed tokens per
+    decode row-step, and the modeled photonic verify speedup
+    (--spec-k enables prompt-lookup speculation; --temperature samples
+    per request instead of greedy)
   * prefix-cache hit-rate, ring-buffer block-reuse rate, and total
     swap time (out+in)
   * per-mixer-family state-pool occupancy (peak used blocks/slots over
@@ -32,7 +36,7 @@ import numpy as np
 from repro import configs
 from repro.configs.base import reduced
 from repro.models import transformer as M
-from repro.serving import Engine, EngineConfig
+from repro.serving import Engine, EngineConfig, SamplingParams, nearest_rank
 
 # one row per mixer family: paged KV, slot (ssm), paged latent (mla),
 # ring buffer (sliding window)
@@ -61,7 +65,8 @@ def bench_arch(arch: str, *, smoke: bool, n_requests: int, rate_hz: float,
                precision: str = "bnn", seed: int = 0,
                accelerator: str = "OXBNN_50", prefix_cache: bool = False,
                preempt_policy: str = "swap",
-               shared_frac: float = 0.5) -> dict:
+               shared_frac: float = 0.5, spec_k: int = 0,
+               temperature: float = 0.0) -> dict:
     cfg = configs.get_config(arch)
     if smoke:
         cfg = reduced(cfg)
@@ -82,8 +87,12 @@ def bench_arch(arch: str, *, smoke: bool, n_requests: int, rate_hz: float,
         num_blocks=1 + max_batch * (-(-max_len // bs) + 1),
         max_batch=max_batch, prefill_chunk=min(16, prompt_len),
         max_model_len=max_len, accelerator=accelerator,
-        prefix_cache=prefix_cache, preempt_policy=preempt_policy)
+        prefix_cache=prefix_cache, preempt_policy=preempt_policy,
+        spec_k=spec_k)
     eng = Engine(params, cfg, ecfg)
+
+    def sampling(i: int) -> SamplingParams:
+        return SamplingParams(temperature=temperature, seed=seed + i)
 
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / rate_hz, n_requests))
@@ -113,7 +122,8 @@ def bench_arch(arch: str, *, smoke: bool, n_requests: int, rate_hz: float,
         now = time.perf_counter() - t0
         while pending and arrivals[pending[0]] <= now:
             i = pending.pop(0)
-            rid = eng.submit(prompts[i], gen, arrival_s=arrivals[i])
+            rid = eng.submit(prompts[i], gen, arrival_s=arrivals[i],
+                             sampling=sampling(i))
             submitted[rid] = arrivals[i]
         if eng.scheduler.idle:
             if pending:
@@ -126,14 +136,22 @@ def bench_arch(arch: str, *, smoke: bool, n_requests: int, rate_hz: float,
                   for rid, arr in submitted.items()
                   if eng.requests[rid].finish_s is not None)
     st = eng.stats()
-    pc, sw, mx = st["prefix_cache"], st["swap"], st["mixer"]
+    pc, sw, mx, sp = (st["prefix_cache"], st["swap"], st["mixer"],
+                      st["speculative"])
     blk, slt = mx.get("blocks"), mx.get("slots")
     return {
         "arch": arch, "requests": n_requests,
-        "tokens_per_s": st["decoded_tokens"] / wall,
-        "p50_latency_s": lats[len(lats) // 2],
-        "p99_latency_s": lats[min(int(0.99 * len(lats)), len(lats) - 1)],
+        # decode tokens over the OPEN-LOOP wall (arrival waits included);
+        # the engine's decode/total split over compute wall is in `st`
+        "decode_tokens_per_s": st["decoded_tokens"] / wall,
+        "total_tokens_per_s":
+            (st["decoded_tokens"] + st["prefill_tokens"]) / wall,
+        "p50_latency_s": nearest_rank(lats, 50),
+        "p99_latency_s": nearest_rank(lats, 99),
         "max_concurrent": st["max_concurrent_decode"],
+        "acceptance_rate": sp["acceptance_rate"],
+        "tokens_per_decode_step": sp["tokens_per_decode_step"],
+        "modeled_spec_speedup": st["photonic"]["modeled_spec_speedup"],
         "preemptions": st["preemptions"],
         "prefix_hit_rate": pc["hit_rate"],
         "skipped_prefill_tokens": pc["skipped_prefill_tokens"],
@@ -171,6 +189,10 @@ def main():
                     choices=["swap", "recompute"])
     ap.add_argument("--shared-frac", type=float, default=0.5,
                     help="fraction of requests drawing a shared prefix")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative draft length (0 = off)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="per-request sampling temperature (0 = greedy)")
     args = ap.parse_args()
 
     archs = args.archs.split(",") if args.archs else SMOKE_ARCHS
@@ -182,10 +204,11 @@ def main():
     def occ(v):
         return "   -" if np.isnan(v) else f"{100 * v:>3.0f}%"
 
-    print(f"{'arch':<22} {'tok/s':>8} {'p50(s)':>8} {'p99(s)':>8} "
-          f"{'maxconc':>8} {'evict':>6} {'hit%':>6} {'reuse%':>7} "
+    print(f"{'arch':<22} {'dec tok/s':>9} {'tot tok/s':>9} {'p50(s)':>8} "
+          f"{'p99(s)':>8} {'maxconc':>8} {'evict':>6} {'hit%':>6} "
+          f"{'acc%':>6} {'tok/step':>9} {'reuse%':>7} "
           f"{'blk-occ':>8} {'slot-occ':>9} {'swap(ms)':>9} "
-          f"{'modeled tok/s':>14} {'eff tok/s':>12}")
+          f"{'modeled tok/s':>14} {'eff tok/s':>12} {'spec-x':>7}")
     for arch in archs:
         r = bench_arch(arch, smoke=args.smoke, n_requests=n, rate_hz=rate,
                        prompt_len=plen, gen=gen, max_batch=args.max_batch,
@@ -193,17 +216,22 @@ def main():
                        accelerator=args.accelerator,
                        prefix_cache=args.prefix_cache,
                        preempt_policy=args.preempt_policy,
-                       shared_frac=args.shared_frac)
-        print(f"{r['arch']:<22} {r['tokens_per_s']:>8.1f} "
+                       shared_frac=args.shared_frac,
+                       spec_k=args.spec_k, temperature=args.temperature)
+        print(f"{r['arch']:<22} {r['decode_tokens_per_s']:>9.1f} "
+              f"{r['total_tokens_per_s']:>9.1f} "
               f"{r['p50_latency_s']:>8.3f} {r['p99_latency_s']:>8.3f} "
               f"{r['max_concurrent']:>8d} {r['preemptions']:>6d} "
               f"{100 * r['prefix_hit_rate']:>6.1f} "
+              f"{100 * r['acceptance_rate']:>6.1f} "
+              f"{r['tokens_per_decode_step']:>9.2f} "
               f"{100 * r['ring_reuse_rate']:>7.1f} "
               f"{occ(r['block_occupancy']):>8} "
               f"{occ(r['slot_occupancy']):>9} "
               f"{1e3 * r['swap_s']:>9.2f} "
               f"{r['modeled_tokens_per_s']:>14.0f} "
-              f"{r['modeled_effective_tokens_per_s']:>12.0f}")
+              f"{r['modeled_effective_tokens_per_s']:>12.0f} "
+              f"{r['modeled_spec_speedup']:>7.2f}")
 
 
 if __name__ == "__main__":

@@ -14,6 +14,12 @@ ring-buffer block tables, and SSM keeps per-request recurrent slots
 the original token-by-token batch loop ONLY as the differential-test
 oracle — tests assert the engine reproduces its greedy tokens exactly.
 
+Per-request sampling (--temperature/--top-k/--top-p/--sampling-seed,
+--stop-token for early termination) selects tokens inside the jitted
+steps with (seed, position) PRNG keys; --spec-k enables prompt-lookup
+speculative decoding (multi-token verify on the XNOR path, modeled
+photonic speedup reported next to acceptance rate).
+
 Usage (CPU smoke):
   PYTHONPATH=src python -m repro.launch.serve --arch bnn-lm-100m --smoke \
       --batch 4 --prompt-len 16 --gen 16 --precision bnn
@@ -33,7 +39,7 @@ from repro.launch.mesh import make_production_mesh, smoke_mesh
 from repro.dist import sharding as S
 from repro.layers import common as C
 from repro.models import transformer as M
-from repro.serving import Engine, EngineConfig
+from repro.serving import Engine, EngineConfig, SamplingParams
 
 
 def _setup(arch, smoke, multi_pod, precision, seed):
@@ -94,9 +100,14 @@ def serve(arch: str, *, smoke: bool = False, multi_pod: bool = False,
           greedy: bool = True, engine: str = "paged",
           block_size: int | None = None, prefill_chunk: int | None = None,
           accelerator: str = "OXBNN_50", verbose: bool = True,
-          prefix_cache: bool = True, preempt_policy: str = "swap"):
+          prefix_cache: bool = True, preempt_policy: str = "swap",
+          temperature: float = 0.0, top_k: int = 0, top_p: float = 1.0,
+          sampling_seed: int = 0, stop: tuple[int, ...] = (),
+          spec_k: int = 0, spec_ngram: int = 3):
     """Serve ``batch`` synthetic requests; returns (batch, prompt+gen)
-    token ids (prompt prefix included, matching the legacy loop)."""
+    token ids (prompt prefix included, matching the legacy loop).  With
+    stop tokens the generations can end early — the result is then a
+    ragged list instead of a stacked array."""
     if engine == "legacy":
         return serve_legacy(arch, smoke=smoke, multi_pod=multi_pod,
                             batch=batch, prompt_len=prompt_len, gen=gen,
@@ -113,19 +124,35 @@ def serve(arch: str, *, smoke: bool = False, multi_pod: bool = False,
             max_model_len=max_len,
             accelerator=accelerator,
             prefix_cache=prefix_cache,
-            preempt_policy=preempt_policy)
+            preempt_policy=preempt_policy,
+            spec_k=spec_k, spec_ngram=spec_ngram)
         eng = Engine(params, cfg, ecfg)
         prompts = np.asarray(_prompts(cfg, batch, prompt_len, seed))
-        rids = [eng.submit(prompts[b], gen) for b in range(batch)]
+        # temperature speaks for itself (0 == greedy); the ``greedy``
+        # flag only selects the legacy loop's sampling mode above
+        rids = [eng.submit(prompts[b], gen,
+                           sampling=SamplingParams(
+                               temperature=temperature,
+                               top_k=top_k, top_p=top_p,
+                               seed=sampling_seed + b, stop=stop))
+                for b in range(batch)]
         out = eng.run()
         stats = eng.stats()
         if verbose:
             ph, pc, sw = (stats["photonic"], stats["prefix_cache"],
                           stats["swap"])
             print(f"[serve] {arch} precision={cfg.precision} batch={batch} "
-                  f"tokens/s={stats['tokens_per_s']:.1f} "
+                  f"decode-tokens/s={stats['decode_tokens_per_s']:.1f} "
+                  f"total-tokens/s={stats['total_tokens_per_s']:.1f} "
                   f"steps={stats['steps']} "
                   f"max_concurrent={stats['max_concurrent_decode']}")
+            sp = stats["speculative"]
+            if sp["enabled"]:
+                print(f"[serve] speculative k={sp['spec_k']}: "
+                      f"acceptance={sp['acceptance_rate']:.2f} "
+                      f"tokens/step={sp['tokens_per_decode_step']:.2f} "
+                      f"modeled-speedup="
+                      f"{ph['modeled_spec_speedup']:.2f}x")
             for fam, mx in stats["mixer"].items():
                 occ = 100 * mx["occupancy"]
                 extra = (f" ring_blocks={mx['ring_blocks']} "
@@ -144,7 +171,10 @@ def serve(arch: str, *, smoke: bool = False, multi_pod: bool = False,
                   f"(effective {ph['modeled_effective_tokens_per_s']:.0f} "
                   f"with prefix credit; bottleneck: "
                   f"{ph['bottleneck_stage']})")
-        return np.stack([out[r] for r in rids])
+        seqs = [out[r] for r in rids]
+        if len({len(s) for s in seqs}) > 1:      # early stop: ragged
+            return seqs
+        return np.stack(seqs)
     finally:
         C.clear_sharding_context()
 
@@ -168,13 +198,32 @@ def main():
     ap.add_argument("--preempt-policy", default="swap",
                     choices=["swap", "recompute"],
                     help="swap-to-host (default) or recompute-on-resume")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k filter (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus filter (1.0 = off)")
+    ap.add_argument("--sampling-seed", type=int, default=0,
+                    help="base per-request sampling seed")
+    ap.add_argument("--stop-token", type=int, action="append", default=[],
+                    help="stop/eos token id (repeatable)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative draft length (0 = off)")
+    ap.add_argument("--spec-ngram", type=int, default=3,
+                    help="max n-gram for prompt-lookup drafting")
     args = ap.parse_args()
     serve(args.arch, smoke=args.smoke, multi_pod=args.multi_pod,
           batch=args.batch, prompt_len=args.prompt_len, gen=args.gen,
           precision=args.precision, engine=args.engine,
           block_size=args.block_size, prefill_chunk=args.prefill_chunk,
           accelerator=args.accelerator, prefix_cache=args.prefix_cache,
-          preempt_policy=args.preempt_policy)
+          preempt_policy=args.preempt_policy,
+          greedy=args.temperature <= 0,     # legacy-loop sampling mode
+          temperature=args.temperature,
+          top_k=args.top_k, top_p=args.top_p,
+          sampling_seed=args.sampling_seed, stop=tuple(args.stop_token),
+          spec_k=args.spec_k, spec_ngram=args.spec_ngram)
 
 
 if __name__ == "__main__":

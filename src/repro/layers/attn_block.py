@@ -182,6 +182,14 @@ def prefill_chunk(params, cfg, x: Array, cache, block_table: Array,
     many of the C chunk positions are real (the rest are padding).
     Causal within the chunk, full (or window-masked) attention to the
     cached prefix.
+
+    This is also the engine's multi-token SPECULATIVE VERIFY entry
+    point ([last_token, draft...] rows): rejecting a draft suffix needs
+    no block-level rollback — the engine simply rewinds the committed
+    length, stale writes past it are masked by per-row kv_len (and, in
+    ring mode, resolve to out-of-window ages via ring_key_positions as
+    long as the verify chunk is no wider than the prefill chunk the
+    ring was sized for).
     """
     b, ch, _ = x.shape
     mb = block_table.shape[1]

@@ -218,6 +218,21 @@ def init_paged_state(cfg, num_slots: int, dtype=jnp.float32):
     }
 
 
+def snapshot_slots(cache, slots: Array) -> dict:
+    """Device-side copy of each row's recurrent slot — taken BEFORE a
+    multi-token verify so a partially-rejected speculative step can be
+    rolled back (restore + re-advance by the accepted prefix only)."""
+    return {k: v[slots] for k, v in cache.items()}
+
+
+def restore_slots(cache, slots: Array, snap: dict) -> dict:
+    """Write per-row snapshots back into the slot pool (the speculative
+    rollback).  Rows sharing the scratch slot all rewrite the same
+    scratch snapshot, so duplicate indices are harmless."""
+    return {k: v.at[slots].set(snap[k].astype(v.dtype))
+            for k, v in cache.items()}
+
+
 def paged_decode_step(params, cfg, x: Array, cache, slots: Array, *,
                       precision: str = "bf16",
                       active: Array | None = None) -> tuple[Array, dict]:
@@ -245,6 +260,14 @@ def prefill_chunk(params, cfg, x: Array, cache, slots: Array,
     h0 folded in: y_t += C_t · h0 · exp(cum_t) and the written state is
     h0 · exp(total) + (chunk boundary state).  Chunks are engine-sized
     (<= prefill_chunk), so the quadratic intra-chunk term stays tiny.
+
+    Doubles as the speculative VERIFY/REPAIR entry point: verify runs
+    it over [last_token, draft...] (full n_valid, logits at every
+    position); on partial acceptance the repair pass restores the
+    pre-verify slot snapshot (snapshot_slots/restore_slots) and re-runs
+    this with n_valid = committed prefix, which advances the state by
+    exactly the accepted tokens — the dt masking makes rejected
+    positions true no-ops.
     """
     bsz, c_len, _ = x.shape
     zxbcdt = C.dense(x, params["in_proj"], precision)

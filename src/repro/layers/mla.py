@@ -163,7 +163,13 @@ def prefill_chunk(params, cfg, x: Array, cache, block_table: Array,
                   lengths: Array, n_valid: Array, *,
                   precision: str = "bf16",
                   ring: bool = False) -> tuple[Array, dict]:
-    """Chunked prefill of C latent tokens per row at per-row offsets."""
+    """Chunked prefill of C latent tokens per row at per-row offsets.
+
+    Doubles as the speculative VERIFY entry point (the per-head K/V a
+    draft needs are re-expanded from the scattered latents at read
+    time); rollback of a rejected suffix is the same lengths-rewind as
+    the GQA pool — stale latent writes are masked by kv_len.
+    """
     from repro.layers import attn_block
 
     b, ch, _ = x.shape

@@ -512,6 +512,44 @@ def prefill_chunk(params, cfg: ArchConfig, tokens: Array, caches,
     return logits, new_caches
 
 
+def snapshot_slot_state(cfg: ArchConfig, caches, slots: Array) -> list:
+    """Per-layer pre-step snapshots of the recurrent slots (None for
+    block-family layers).  Block layouts roll back by rewinding
+    ``lengths`` — stale writes past the committed length are masked —
+    but an SSM slot folds every verified token into its state, so the
+    only rollback is restore-and-re-advance from this snapshot."""
+    return [mamba2.snapshot_slots(caches[li], slots) if mix == "ssm" else None
+            for li, (mix, _f) in enumerate(layer_plan(cfg))]
+
+
+def restore_slot_state(cfg: ArchConfig, caches, slots: Array, snaps: list):
+    """Write slot snapshots back (speculative rollback), block-family
+    layers untouched."""
+    return [caches[li] if snap is None
+            else mamba2.restore_slots(caches[li], slots, snap)
+            for li, snap in enumerate(snaps)]
+
+
+def spec_verify(params, cfg: ArchConfig, tokens: Array, caches,
+                block_table: Array, lengths: Array, n_valid: Array,
+                slots: Array | None = None, *, ring: bool = False):
+    """Multi-token speculative verify: one prefill-shaped forward over
+    ``[last_token, draft...]`` rows scores every draft position at once.
+
+    Same contract as ``prefill_chunk`` (logits at all C positions,
+    per-row lengths/n_valid), plus pre-step recurrent-slot snapshots so
+    the caller can roll back rejected suffixes: block/ring layouts
+    rewind by committing only ``lengths + accepted``, slot layouts
+    restore the snapshot and re-advance by the accepted prefix
+    (``restore_slot_state`` + a masked ``prefill_chunk``).
+    Returns (logits (B, C, V), new_caches, slot_snapshots).
+    """
+    snaps = snapshot_slot_state(cfg, caches, slots)
+    logits, caches = prefill_chunk(params, cfg, tokens, caches, block_table,
+                                   lengths, n_valid, slots, ring=ring)
+    return logits, caches, snaps
+
+
 def decode_step(params, cfg: ArchConfig, tokens: Array, caches, length, *,
                 unroll: bool | None = None):
     """tokens (B, 1) int32; length: scalar int32 current cache fill.

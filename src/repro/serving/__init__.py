@@ -3,7 +3,9 @@ photonic-aware scheduling).  See docs/serving.md."""
 from repro.serving.block_cache import (                             # noqa: F401
     BlockAllocator, BlockKVCache, MixerStateCache, PrefixIndex, chunk_key)
 from repro.serving.cost_model import PhotonicCostModel, gemm_specs  # noqa: F401
-from repro.serving.engine import Engine, EngineConfig               # noqa: F401
+from repro.serving.engine import Engine, EngineConfig, nearest_rank  # noqa: F401
+from repro.serving.sampling import (                                # noqa: F401
+    SamplingParams, prompt_lookup_draft, sample_tokens)
 from repro.serving.mixer_state import (                             # noqa: F401
     MixerState, RecurrentSlotState, layer_layouts, ring_block_count)
 from repro.serving.request import Request, State                    # noqa: F401

@@ -128,6 +128,50 @@ class PhotonicCostModel:
         """Batch-1-sequential accelerator: B rows = B tokens back-to-back."""
         return n_tokens * self.token_latency_s
 
+    # --------------------------------------------------- speculative decode
+
+    @property
+    def pipeline_interval_s(self) -> float:
+        """Summed per-layer bottleneck-stage time: the marginal cost of
+        streaming ONE MORE token through the weight-stationary XPC/PCA
+        pipeline (every layer's fills are already paid)."""
+        return sum(max(s.time_s for s in l.stages) for l in self.layers)
+
+    @property
+    def fill_s(self) -> float:
+        """Summed per-layer pipeline fill/drain — paid once per pass
+        over the layer stack, however many tokens stream through."""
+        return sum(l.latency_s - max(s.time_s for s in l.stages)
+                   for l in self.layers)
+
+    def verify_latency_s(self, n_tokens: int) -> float:
+        """Modeled latency of ONE multi-token verify pass: n tokens
+        stream through each layer's pipelined stages back-to-back, so
+        each layer costs n bottleneck intervals plus one fill — the
+        simulator's own per-layer model (latency = max stage + fill)
+        extended from 1 to n transactions.  This is why speculative
+        decoding pays off on the paper's batch-1 accelerator: verifying
+        k+1 tokens costs little more than one."""
+        return n_tokens * self.pipeline_interval_s + self.fill_s
+
+    def speculative_report(self, *, verify_passes: int, verify_tokens: int,
+                           committed_tokens: int) -> dict:
+        """Modeled accelerator speedup of the served speculative
+        stream: committed tokens decoded sequentially vs the verify
+        passes that actually produced them.  ``verify_passes`` counts
+        per-ROW passes — the batch-1 accelerator streams each row
+        through the layer stack separately, so every row pays its own
+        pipeline fills (a no-draft pass then costs exactly one token
+        and the speedup degenerates to 1.0, as it should)."""
+        if verify_passes <= 0 or committed_tokens <= 0:
+            return {"modeled_spec_speedup": 1.0}
+        spent = (verify_tokens * self.pipeline_interval_s
+                 + verify_passes * self.fill_s)
+        return {
+            "modeled_spec_speedup":
+                committed_tokens * self.token_latency_s / spent,
+        }
+
     def serving_report(self, *, prefill_tokens: int, decode_tokens: int,
                        skipped_tokens: int = 0) -> dict:
         """Modeled accelerator cost of a served token stream.  Prompt

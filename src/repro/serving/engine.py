@@ -11,12 +11,25 @@ Compile discipline: the decode batch is padded to power-of-two buckets
 mixer-state pools are donated into every call — XLA updates the touched
 blocks/slots in place instead of double-buffering the whole cache.
 
-Every mixer family schedules through the same MixerState protocol
-(serving/mixer_state.py): full-attention stacks page KV blocks, MLA
-stacks page compressed latents, sliding-window stacks run ring-buffer
-block tables, and SSM stacks keep one recurrent slot per request — the
-engine just passes (block_table, lengths, slots) into the jitted steps
-and each layer reads what its layout needs.
+Token selection happens INSIDE the jitted calls (serving/sampling.py):
+each request carries SamplingParams (temperature / top-k / top-p /
+seed / stop tokens) and the PRNG key for the token at sequence index i
+is fold_in(PRNGKey(seed), i) — deterministic across bucket padding,
+preemption, and swap-in by construction.  A stop token finishes the
+request at the step it is emitted, releasing its blocks immediately.
+
+Speculative decoding (``spec_k > 0``) drafts tokens by prompt-lookup
+(n-gram match against the request's own prompt+output — no second
+model) and verifies the whole draft in ONE prefill-shaped forward per
+step: on the paper's batch-1 photonic pipeline a k-token verify costs
+one pipeline fill plus k bottleneck-stage intervals, far less than k
+sequential tokens, which is exactly the modeled speedup the cost model
+reports.  Rejected suffixes roll back per layout: block/ring tables
+rewind by committing only the accepted length (stale writes are masked
+by per-row kv_len / ring positions), recurrent SSM slots restore a
+pre-verify snapshot and re-advance by the accepted prefix.  Because
+sampling is a pure function of (seed, position), the verified stream
+is token-identical to non-speculative decoding at ANY temperature.
 
 With cfg.precision == "bnn" every projection runs the packed
 XNOR-popcount GEMM — the paper's inference mode — and the attached
@@ -25,6 +38,7 @@ sustain on the same token stream, next to host wall-clock.
 """
 from __future__ import annotations
 
+import math
 import time
 from dataclasses import dataclass
 
@@ -36,7 +50,21 @@ from repro.models import transformer as M
 from repro.serving.block_cache import MixerStateCache
 from repro.serving.cost_model import PhotonicCostModel
 from repro.serving.request import Request, State
+from repro.serving.sampling import (SamplingParams, prompt_lookup_draft,
+                                    sample_tokens, sampling_rows)
 from repro.serving.scheduler import Scheduler, SchedulerConfig
+
+
+def nearest_rank(sorted_vals, p: float) -> float:
+    """Nearest-rank percentile over an ascending sample: the smallest
+    value with at least p% of the sample at or below it — 0-indexed
+    ``ceil(p/100 * n) - 1``.  (``int(p/100 * n)`` biases p50 high on
+    even n and reads p99 as the max for n = 100.)"""
+    if not len(sorted_vals):
+        return float("nan")
+    n = len(sorted_vals)
+    idx = max(math.ceil(p / 100 * n) - 1, 0)
+    return sorted_vals[min(idx, n - 1)]
 
 
 @dataclass(frozen=True)
@@ -53,6 +81,8 @@ class EngineConfig:
     prefix_cache: bool = True        # content-addressed prompt block reuse
     preempt_policy: str = "swap"     # swap | recompute (fallback)
     num_slots: int = 0               # recurrent slots; 0 = max_batch + 1
+    spec_k: int = 0                  # speculative draft length (0 = off)
+    spec_ngram: int = 3              # max n-gram for prompt-lookup drafts
 
 
 class Engine:
@@ -67,13 +97,20 @@ class Engine:
             prefix_cache=ecfg.prefix_cache,
             num_slots=ecfg.num_slots or ecfg.max_batch + 1,
             prefill_chunk=ecfg.prefill_chunk)
+        # ring rollback safety: stale speculative writes must only ever
+        # clobber positions already outside the attention window, which
+        # the prefill-sized ring guarantees when the verify chunk is no
+        # wider than a prefill chunk (k + 1 <= prefill_chunk)
+        self._spec_k = (min(ecfg.spec_k, ecfg.prefill_chunk - 1)
+                        if ecfg.spec_k > 0 else 0)
         self.scheduler = Scheduler(
             SchedulerConfig(max_batch=ecfg.max_batch,
                             max_tokens_in_flight=ecfg.max_tokens_in_flight,
                             max_batched_tokens=ecfg.max_batched_tokens,
                             prefill_chunk=ecfg.prefill_chunk,
                             policy=ecfg.policy,
-                            preempt_policy=ecfg.preempt_policy),
+                            preempt_policy=ecfg.preempt_policy,
+                            decode_cost=1 + self._spec_k),
             self.cache)
         self.cost_model = PhotonicCostModel(cfg, ecfg.accelerator)
         self.requests: dict[int, Request] = {}
@@ -83,28 +120,95 @@ class Engine:
         self._decoded = 0
         self._prefilled = 0
         self._max_concurrent = 0
+        self._decode_calls = 0
+        self._decode_rows = 0            # scheduled rows across decode calls
+        self._decode_produced = 0        # tokens committed by decode calls
+        # speculative counters
+        self._spec_steps = 0
+        self._spec_rows = 0              # per-row verify passes
+        self._verify_tokens = 0          # fed tokens across verify calls
+        self._spec_committed = 0         # tokens committed by verify steps
+        self._draft_tokens = 0
+        self._draft_accepted = 0
+        self._spec_repairs = 0
+        self._has_slots = self.cache.ssm is not None
 
         cfg_ = cfg  # closure constants (static); params/pools stay args
         ring_ = self.cache.ring_blocks > 0
 
-        def _prefill(params, pools, tokens, table, lengths, n_valid, slots):
-            return M.prefill_chunk(params, cfg_, tokens, pools, table,
-                                   lengths, n_valid, slots, ring=ring_)
+        def _prefill(params, pools, tokens, table, lengths, n_valid, slots,
+                     seeds, temps, top_k, top_p):
+            logits, pools = M.prefill_chunk(params, cfg_, tokens, pools,
+                                            table, lengths, n_valid, slots,
+                                            ring=ring_)
+            # chunk-final logits row -> the would-be next token (used by
+            # the engine only when this chunk completes the prompt)
+            gather = jnp.maximum(n_valid - 1, 0)[:, None, None]
+            last = jnp.take_along_axis(
+                logits, jnp.broadcast_to(
+                    gather, (logits.shape[0], 1, logits.shape[2])),
+                axis=1)[:, 0]
+            tok = sample_tokens(last, lengths + n_valid,
+                                seeds, temps, top_k, top_p)
+            return tok, logits, pools
 
-        def _decode(params, pools, tokens, table, lengths, active, slots):
+        def _decode(params, pools, tokens, table, lengths, active, slots,
+                    seeds, temps, top_k, top_p):
             logits, pools = M.paged_decode_step(params, cfg_, tokens, pools,
                                                 table, lengths, active,
                                                 slots, ring=ring_)
-            return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), \
-                logits, pools
+            tok = sample_tokens(logits[:, -1], lengths + 1,
+                                seeds, temps, top_k, top_p)
+            return tok, logits, pools
 
         self._prefill_fn = jax.jit(_prefill, donate_argnums=(1,))
         self._decode_fn = jax.jit(_decode, donate_argnums=(1,))
 
+        if self._spec_k:
+            def _spec(params, pools, tokens, table, lengths, n_valid, slots,
+                      draft, seeds, temps, top_k, top_p):
+                b, c = tokens.shape
+                logits, pools, snaps = M.spec_verify(
+                    params, cfg_, tokens, pools, table, lengths, n_valid,
+                    slots, ring=ring_)
+                # sample EVERY position with its own (seed, index) key —
+                # identical to what plain decoding would draw there
+                idx = (lengths[:, None] + 1
+                       + jnp.arange(c, dtype=jnp.int32)[None, :])
+                rep = lambda a: jnp.repeat(a, c)
+                sampled = sample_tokens(
+                    logits.reshape(b * c, -1), idx.reshape(-1),
+                    rep(seeds), rep(temps), rep(top_k), rep(top_p)
+                ).reshape(b, c)
+                # accepted draft prefix: position j counts while the
+                # verifier's token agrees with the draft's
+                j = jnp.arange(c - 1, dtype=jnp.int32)[None, :]
+                ok = (sampled[:, :-1] == draft) & (j < (n_valid - 1)[:, None])
+                acc = jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=1),
+                              axis=1)
+                n_commit = jnp.where(n_valid > 0, acc + 1, 0)
+                return sampled, n_commit, pools, snaps
+
+            def _repair(params, pools, tokens, table, lengths, n_commit,
+                        slots, snaps):
+                # SSM rollback for partially-accepted rows: restore the
+                # pre-verify slot snapshots, then re-advance every row by
+                # exactly its committed prefix (masked prefill re-writes
+                # identical K/V for block layers — idempotent)
+                pools = M.restore_slot_state(cfg_, pools, slots, snaps)
+                _, pools = M.prefill_chunk(params, cfg_, tokens, pools,
+                                           table, lengths, n_commit, slots,
+                                           ring=ring_)
+                return pools
+
+            self._spec_fn = jax.jit(_spec, donate_argnums=(1,))
+            self._repair_fn = jax.jit(_repair, donate_argnums=(1,))
+
     # ---------------------------------------------------------------- API
 
     def submit(self, prompt, max_new: int, *, priority: int = 0,
-               arrival_s: float = 0.0) -> int:
+               arrival_s: float = 0.0,
+               sampling: SamplingParams | None = None) -> int:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size + max_new > self.ecfg.max_model_len:
             raise ValueError(
@@ -117,7 +221,8 @@ class Engine:
         rid = self._next_rid
         self._next_rid += 1
         req = Request(rid, prompt, max_new, priority=priority,
-                      arrival_s=arrival_s)
+                      arrival_s=arrival_s,
+                      sampling=sampling or SamplingParams())
         req.submit_s = time.perf_counter()
         self.requests[rid] = req
         self.scheduler.submit(req, self.step_count)
@@ -134,7 +239,10 @@ class Engine:
         decode = [r for r in plan.decode
                   if r.state == State.DECODE and r in self.scheduler.running]
         if decode:
-            self._run_decode(step, decode)
+            if self._spec_k:
+                self._run_decode_spec(step, decode)
+            else:
+                self._run_decode(step, decode)
         self.step_count += 1
         self._wall_s += time.perf_counter() - t0
         return plan.has_work
@@ -144,10 +252,13 @@ class Engine:
         rid -> full token sequence (prompt + generated)."""
         while not self.scheduler.idle:
             if not self.step():
-                stuck = [r.rid for r in self.scheduler.queue]
+                stalls = self.scheduler.stall_reasons()
+                detail = "; ".join(
+                    f"rid={rid}[{state}]: {why}"
+                    for rid, (state, why) in sorted(stalls.items()))
                 raise RuntimeError(
-                    f"unschedulable requests {stuck}: prompt/generation "
-                    "exceeds the block pool — raise num_blocks")
+                    "engine stalled with unschedulable requests — last "
+                    f"defer/swap_lost reason per request: {detail}")
         return {rid: r.full_sequence() for rid, r in self.requests.items()
                 if r.state == State.FINISHED}
 
@@ -166,10 +277,12 @@ class Engine:
         tokens[0, :chunk] = req.prompt[req.pos:req.pos + chunk]
         table = self.cache.table_rows([req], 1)
         slots = self.cache.slot_rows([req], 1)
-        logits, pools = self._prefill_fn(
+        srows = sampling_rows([req], 1)
+        tok, _logits, pools = self._prefill_fn(
             self.params, self.cache.pools, jnp.asarray(tokens),
             jnp.asarray(table), jnp.asarray([req.pos], jnp.int32),
-            jnp.asarray([chunk], jnp.int32), jnp.asarray(slots))
+            jnp.asarray([chunk], jnp.int32), jnp.asarray(slots),
+            *srows.as_args())
         self.cache.pools = pools
         req.pos += chunk
         self._prefilled += chunk
@@ -177,8 +290,7 @@ class Engine:
         self.scheduler._ev(step, "prefill", req.rid, tokens=chunk,
                            pos=req.pos)
         if req.pos == req.prompt_len:
-            tok = int(jnp.argmax(logits[0, chunk - 1]))
-            req.out.append(tok)
+            req.out.append(int(np.asarray(tok)[0]))
             req.state = State.DECODE
             req.first_token_step = step
             req.first_token_s = time.perf_counter()
@@ -195,18 +307,30 @@ class Engine:
             b <<= 1
         return b
 
-    def _run_decode(self, step: int, reqs: list[Request]):
+    def _ready_rows(self, step: int, reqs: list[Request],
+                    lookahead) -> list[Request]:
+        """Grow + CoW every decodable row for ``lookahead(r)`` new cache
+        positions, dropping rows that get preempted along the way."""
         ready: list[Request] = []
         for r in reqs:
             if r not in self.scheduler.running or r.state != State.DECODE:
                 continue
-            if self.scheduler.grow_or_preempt(step, r, r.pos + 1) \
-                    and self.scheduler.make_writable(
-                        step, r, r.pos // self.ecfg.block_size):
+            n_new = lookahead(r)
+            if not self.scheduler.grow_or_preempt(step, r, r.pos + n_new):
+                continue
+            ok = True
+            for idx in self.cache.writable_indices(r.pos, n_new):
+                if not self.scheduler.make_writable(step, r, idx):
+                    ok = False
+                    break
+            if ok:
                 ready.append(r)
         # a later grow may have preempted an earlier 'ready' row
-        ready = [r for r in ready
-                 if r in self.scheduler.running and r.state == State.DECODE]
+        return [r for r in ready
+                if r in self.scheduler.running and r.state == State.DECODE]
+
+    def _run_decode(self, step: int, reqs: list[Request]):
+        ready = self._ready_rows(step, reqs, lambda r: 1)
         if not ready:
             return
         bucket = min(self._bucket(len(ready)), self.ecfg.max_batch)
@@ -219,13 +343,17 @@ class Engine:
             active[i] = True
         table = self.cache.table_rows(ready, bucket)
         slots = self.cache.slot_rows(ready, bucket)
+        srows = sampling_rows(ready, bucket)
         next_tok, _, pools = self._decode_fn(
             self.params, self.cache.pools, jnp.asarray(tokens),
             jnp.asarray(table), jnp.asarray(lengths), jnp.asarray(active),
-            jnp.asarray(slots))
+            jnp.asarray(slots), *srows.as_args())
         self.cache.pools = pools
         next_tok = np.asarray(next_tok)
         self._max_concurrent = max(self._max_concurrent, len(ready))
+        self._decode_calls += 1
+        self._decode_rows += len(ready)
+        self._decode_produced += len(ready)
         self.scheduler._ev(step, "decode", None,
                            rids=[r.rid for r in ready], batch=bucket)
         now = time.perf_counter()
@@ -237,6 +365,95 @@ class Engine:
                 self.scheduler.finish(step, r)
                 r.finish_s = now
 
+    # ------------------------------------------------- speculative decode
+
+    def _run_decode_spec(self, step: int, reqs: list[Request]):
+        """One verify step: draft by prompt lookup, score the whole
+        draft in one multi-token forward, commit the accepted prefix
+        plus the verifier's own next token, roll back the rest."""
+        drafts: dict[int, np.ndarray] = {}
+
+        def lookahead(r: Request) -> int:
+            budget = min(self._spec_k, r.max_new - len(r.out) - 1)
+            d = (prompt_lookup_draft(r.full_sequence(), budget,
+                                     self.ecfg.spec_ngram)
+                 if budget > 0 else np.empty(0, np.int32))
+            drafts[r.rid] = d
+            return len(d) + 1
+
+        ready = self._ready_rows(step, reqs, lookahead)
+        if not ready:
+            return
+        if all(len(drafts[r.rid]) == 0 for r in ready):
+            # nothing to verify: a chunk-wide forward would commit the
+            # same single token per row at prefill-shaped cost — take
+            # the (B, 1) decode path (capacity/CoW above already cover
+            # one token, so the re-check inside is a no-op)
+            self._run_decode(step, ready)
+            return
+        bucket = min(self._bucket(len(ready)), self.ecfg.max_batch)
+        c = self._spec_k + 1
+        tokens = np.zeros((bucket, c), np.int32)
+        draft = np.zeros((bucket, c - 1), np.int32)
+        n_valid = np.zeros(bucket, np.int32)
+        lengths = np.zeros(bucket, np.int32)
+        for i, r in enumerate(ready):
+            d = drafts[r.rid]
+            tokens[i, 0] = r.last_token
+            tokens[i, 1:1 + len(d)] = d
+            draft[i, :len(d)] = d
+            n_valid[i] = len(d) + 1
+            lengths[i] = r.pos
+        table = self.cache.table_rows(ready, bucket)
+        slots = self.cache.slot_rows(ready, bucket)
+        srows = sampling_rows(ready, bucket)
+        j_tokens, j_table, j_lengths, j_valid, j_slots = (
+            jnp.asarray(tokens), jnp.asarray(table), jnp.asarray(lengths),
+            jnp.asarray(n_valid), jnp.asarray(slots))
+        sampled, n_commit, pools, snaps = self._spec_fn(
+            self.params, self.cache.pools, j_tokens, j_table, j_lengths,
+            j_valid, j_slots, jnp.asarray(draft), *srows.as_args())
+        self.cache.pools = pools
+        # recurrent slots folded the FULL draft into their state; any
+        # partial acceptance needs the snapshot-restore + re-advance
+        if self._has_slots and bool(np.any(
+                np.asarray(n_commit)[:len(ready)] < n_valid[:len(ready)])):
+            self.cache.pools = self._repair_fn(
+                self.params, self.cache.pools, j_tokens, j_table,
+                j_lengths, n_commit, j_slots, snaps)
+            self._spec_repairs += 1
+        sampled = np.asarray(sampled)
+        n_commit = np.asarray(n_commit)
+        self._max_concurrent = max(self._max_concurrent, len(ready))
+        self._decode_calls += 1
+        self._decode_rows += len(ready)
+        self._spec_steps += 1
+        self._spec_rows += len(ready)
+        now = time.perf_counter()
+        committed_total = 0
+        for i, r in enumerate(ready):
+            m = int(n_commit[i])
+            self._verify_tokens += int(n_valid[i])
+            self._draft_tokens += int(n_valid[i]) - 1
+            self._draft_accepted += m - 1
+            for jj in range(m):
+                r.pos += 1
+                r.out.append(int(sampled[i, jj]))
+                self._decoded += 1
+                committed_total += 1
+                if r.done:      # stop/max_new mid-draft: finish here —
+                    break       # the request's state is released anyway
+            if r.done:
+                self.scheduler.finish(step, r)
+                r.finish_s = now
+        self._spec_committed += committed_total
+        self._decode_produced += committed_total
+        self.scheduler._ev(step, "spec_decode", None,
+                           rids=[r.rid for r in ready], batch=bucket,
+                           drafted=int(n_valid[:len(ready)].sum())
+                           - len(ready),
+                           committed=committed_total)
+
     # -------------------------------------------------------------- stats
 
     def reset_stats(self, *, flush_prefix: bool = False):
@@ -246,6 +463,11 @@ class Engine:
         self._wall_s = 0.0
         self._decoded = self._prefilled = 0
         self._max_concurrent = 0
+        self._decode_calls = self._decode_rows = self._decode_produced = 0
+        self._spec_steps = self._spec_rows = 0
+        self._verify_tokens = self._spec_committed = 0
+        self._draft_tokens = self._draft_accepted = 0
+        self._spec_repairs = 0
         self.cache.reset_stats(flush_prefix=flush_prefix)
 
     def stats(self) -> dict:
@@ -253,12 +475,6 @@ class Engine:
                     if r.state == State.FINISHED]
         lat = sorted(r.finish_s - r.submit_s for r in finished
                      if r.finish_s is not None and r.submit_s is not None)
-
-        def pct(p):
-            if not lat:
-                return float("nan")
-            return lat[min(int(p / 100 * len(lat)), len(lat) - 1)]
-
         c = self.cache
         prefix = c.prefix_section()
         return {
@@ -267,12 +483,20 @@ class Engine:
             "decoded_tokens": self._decoded,
             "prefill_tokens": self._prefilled,
             "wall_s": self._wall_s,
-            "tokens_per_s": (self._decoded / self._wall_s
-                             if self._wall_s else float("nan")),
-            "p50_latency_s": pct(50),
-            "p99_latency_s": pct(99),
+            # decode-only rate AND the all-computed-tokens rate: the
+            # wall clock covers prefill too, so dividing decoded tokens
+            # alone by it under-reports the engine (the old mislabeled
+            # "tokens_per_s")
+            "decode_tokens_per_s": (self._decoded / self._wall_s
+                                    if self._wall_s else float("nan")),
+            "total_tokens_per_s": (
+                (self._decoded + self._prefilled) / self._wall_s
+                if self._wall_s else float("nan")),
+            "p50_latency_s": nearest_rank(lat, 50),
+            "p99_latency_s": nearest_rank(lat, 99),
             "max_concurrent_decode": self._max_concurrent,
             "preemptions": sum(r.preemptions for r in self.requests.values()),
+            "speculative": self._spec_section(),
             "prefix_cache": prefix,
             "swap": c.swap_section(),
             "mixer": c.mixer_section(),
@@ -282,5 +506,28 @@ class Engine:
                     prefill_tokens=self._prefilled,
                     decode_tokens=self._decoded,
                     skipped_tokens=prefix["skipped_prefill_tokens"]),
+                **self.cost_model.speculative_report(
+                    verify_passes=self._spec_rows,
+                    verify_tokens=self._verify_tokens,
+                    committed_tokens=self._spec_committed),
             },
+        }
+
+    def _spec_section(self) -> dict:
+        drafted = self._draft_tokens
+        return {
+            "enabled": self._spec_k > 0,
+            "spec_k": self._spec_k,
+            "spec_steps": self._spec_steps,
+            "draft_tokens": drafted,
+            "accepted_tokens": self._draft_accepted,
+            "acceptance_rate": (self._draft_accepted / drafted
+                                if drafted else 0.0),
+            # committed tokens per scheduled decode ROW-step: 1.0 for
+            # plain decoding, >1 when verify steps commit accepted
+            # drafts on top of the verifier token
+            "tokens_per_decode_step": (
+                self._decode_produced / self._decode_rows
+                if self._decode_rows else 0.0),
+            "repairs": self._spec_repairs,
         }

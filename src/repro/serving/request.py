@@ -19,6 +19,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.serving.sampling import GREEDY, SamplingParams
+
 
 class State(enum.Enum):
     QUEUED = "queued"
@@ -35,6 +37,7 @@ class Request:
     max_new: int
     priority: int = 0                  # higher = scheduled first
     arrival_s: float = 0.0             # bench-relative arrival time
+    sampling: SamplingParams = GREEDY  # decode policy (greedy default)
 
     # runtime (owned by the scheduler/engine)
     state: State = State.QUEUED
@@ -72,8 +75,15 @@ class Request:
         return int(self.out[-1]) if self.out else int(self.prompt[-1])
 
     @property
+    def stopped(self) -> bool:
+        """A per-request stop/eos token was emitted."""
+        return bool(self.out) and self.out[-1] in self.sampling.stop_set
+
+    @property
     def done(self) -> bool:
-        return len(self.out) >= self.max_new
+        """Length bound reached OR a stop token emitted — the engine
+        finishes (and releases blocks) at the step the stop lands."""
+        return len(self.out) >= self.max_new or self.stopped
 
     @property
     def total_tokens(self) -> int:

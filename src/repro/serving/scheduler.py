@@ -39,6 +39,9 @@ class SchedulerConfig:
     prefill_chunk: int = 16
     policy: str = "fcfs"              # fcfs | priority
     preempt_policy: str = "swap"      # swap | recompute
+    decode_cost: int = 1              # compute tokens one decode row may
+                                      # burn per step (spec_k+1 when the
+                                      # engine verifies drafts)
 
 
 @dataclass
@@ -191,7 +194,10 @@ class Scheduler:
         else:
             prefilling.sort(key=lambda r: r._order)
         if prefilling:
-            budget = self.cfg.max_batched_tokens - len(plan.decode)
+            # each decode row may burn decode_cost compute tokens this
+            # step (speculative verify feeds spec_k+1 per row, not 1)
+            budget = self.cfg.max_batched_tokens \
+                - len(plan.decode) * self.cfg.decode_cost
             req = prefilling[0]
             chunk = min(self.cfg.prefill_chunk, req.prompt_len - req.pos,
                         max(budget, 0))
@@ -199,6 +205,24 @@ class Scheduler:
                 plan.prefill = req
                 plan.prefill_tokens = chunk
         return plan
+
+    # ----------------------------------------------------------- diagnostics
+
+    def stall_reasons(self) -> dict[int, tuple[str, str]]:
+        """rid -> (state, last recorded stall reason) for every stuck
+        request — queued AND swapped alike.  The reason is the most
+        recent ``defer`` reason (no_slot / token_budget / no_blocks) or
+        ``swap_lost`` trace event for that request, so a stalled
+        ``Engine.run()`` can report WHY each request cannot make
+        progress instead of blaming the block pool unconditionally."""
+        last: dict[int, str] = {}
+        for e in self.trace:
+            if e["event"] == "defer":
+                last[e["rid"]] = e["reason"]
+            elif e["event"] == "swap_lost":
+                last[e["rid"]] = "swap_lost"
+        return {r.rid: (r.state.value, last.get(r.rid, "never_considered"))
+                for r in self.queue}
 
     # ------------------------------------------------------------- lifecycle
 

@@ -311,6 +311,32 @@ def test_photonic_cost_model_covers_all_families(family_models):
     assert np.isfinite(rep["modeled_tokens_per_s"])
 
 
+def test_photonic_speculative_speedup_model(bnn_cfg):
+    """Satellite: the modeled k-token verify streams tokens through the
+    weight-stationary pipeline — k bottleneck intervals + one fill per
+    layer — so it beats k sequential tokens, and a no-draft pass
+    degenerates to exactly one token (speedup 1.0)."""
+    cm = PhotonicCostModel(bnn_cfg, "OXBNN_50")
+    assert cm.token_latency_s == pytest.approx(
+        cm.pipeline_interval_s + cm.fill_s)
+    assert cm.verify_latency_s(1) == pytest.approx(cm.token_latency_s)
+    assert cm.verify_latency_s(4) < 4 * cm.token_latency_s
+    rep = cm.speculative_report(verify_passes=5, verify_tokens=5,
+                                committed_tokens=5)
+    assert rep["modeled_spec_speedup"] == pytest.approx(1.0)
+    # full acceptance: 4-token verifies committing everything
+    rep = cm.speculative_report(verify_passes=5, verify_tokens=20,
+                                committed_tokens=20)
+    assert rep["modeled_spec_speedup"] > 1.0
+    # heavy rejection wastes verify passes: speedup dips below 1
+    rep = cm.speculative_report(verify_passes=5, verify_tokens=20,
+                                committed_tokens=5)
+    assert rep["modeled_spec_speedup"] < 1.0
+    assert cm.speculative_report(
+        verify_passes=0, verify_tokens=0,
+        committed_tokens=0)["modeled_spec_speedup"] == 1.0
+
+
 def test_photonic_cost_model_report(bnn_cfg):
     cm = PhotonicCostModel(bnn_cfg, "OXBNN_50")
     rep = cm.report()
