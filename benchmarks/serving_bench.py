@@ -36,12 +36,14 @@ import numpy as np
 from repro import configs
 from repro.configs.base import reduced
 from repro.models import transformer as M
-from repro.serving import Engine, EngineConfig, SamplingParams, nearest_rank
+from repro.serving import (Engine, EngineConfig, SamplingParams,
+                           layer_layouts, nearest_rank)
 
 # one row per mixer family: paged KV, slot (ssm), paged latent (mla),
-# ring buffer (sliding window)
+# ring buffer (sliding window), hybrid (slots + paged KV per layer)
 SMOKE_ARCHS = ["bnn-lm-100m", "qwen1.5-0.5b", "llama3.2-3b",
-               "mamba2-1.3b", "deepseek-v2-lite-16b", "mixtral-8x7b"]
+               "mamba2-1.3b", "deepseek-v2-lite-16b", "mixtral-8x7b",
+               "jamba-1.5-large-398b"]
 
 
 def make_prompts(rng, vocab: int, n_requests: int, prompt_len: int,
@@ -82,10 +84,17 @@ def bench_arch(arch: str, *, smoke: bool, n_requests: int, rate_hz: float,
         print(f"[bench] warning: prompt_len={prompt_len} gives a "
               f"{prompt_len // 2}-token shared head < block_size={bs}; "
               "no full shared block can form, hit% will read 0")
+    # slot snapshots are only capturable at prefill-chunk ends that are
+    # also block boundaries, so SSM/hybrid rows align the chunk to the
+    # block — a chunk spanning the whole prompt would leave nothing
+    # shareable below full-prompt depth and hit% would read 0
+    has_slots = "slot" in layer_layouts(cfg)
+    prefill_chunk = bs if (prefix_cache and has_slots) \
+        else min(16, prompt_len)
     ecfg = EngineConfig(
         block_size=bs,
         num_blocks=1 + max_batch * (-(-max_len // bs) + 1),
-        max_batch=max_batch, prefill_chunk=min(16, prompt_len),
+        max_batch=max_batch, prefill_chunk=prefill_chunk,
         max_model_len=max_len, accelerator=accelerator,
         prefix_cache=prefix_cache, preempt_policy=preempt_policy,
         spec_k=spec_k)
@@ -155,6 +164,9 @@ def bench_arch(arch: str, *, smoke: bool, n_requests: int, rate_hz: float,
         "preemptions": st["preemptions"],
         "prefix_hit_rate": pc["hit_rate"],
         "skipped_prefill_tokens": pc["skipped_prefill_tokens"],
+        "snapshot_hits": pc["snapshot_hits"],
+        "snapshot_occupancy": (pc["snapshot_occupancy"] if slt
+                               else float("nan")),
         "ring_reuse_rate": blk["ring_reuse_rate"] if blk else 0.0,
         "block_occupancy": blk["occupancy"] if blk else float("nan"),
         "slot_occupancy": slt["occupancy"] if slt else float("nan"),
@@ -193,6 +205,10 @@ def main():
                     help="speculative draft length (0 = off)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="per-request sampling temperature (0 = greedy)")
+    ap.add_argument("--require-snapshot-hits", action="store_true",
+                    help="exit non-zero unless every SSM/hybrid row "
+                         "reports snapshot hits and skipped prefill "
+                         "tokens (CI smoke assertion)")
     args = ap.parse_args()
 
     archs = args.archs.split(",") if args.archs else SMOKE_ARCHS
@@ -207,8 +223,10 @@ def main():
     print(f"{'arch':<22} {'dec tok/s':>9} {'tot tok/s':>9} {'p50(s)':>8} "
           f"{'p99(s)':>8} {'maxconc':>8} {'evict':>6} {'hit%':>6} "
           f"{'acc%':>6} {'tok/step':>9} {'reuse%':>7} "
-          f"{'blk-occ':>8} {'slot-occ':>9} {'swap(ms)':>9} "
+          f"{'blk-occ':>8} {'slot-occ':>9} {'snap-occ':>9} "
+          f"{'swap(ms)':>9} "
           f"{'modeled tok/s':>14} {'eff tok/s':>12} {'spec-x':>7}")
+    failures = []
     for arch in archs:
         r = bench_arch(arch, smoke=args.smoke, n_requests=n, rate_hz=rate,
                        prompt_len=plen, gen=gen, max_batch=args.max_batch,
@@ -228,10 +246,20 @@ def main():
               f"{100 * r['ring_reuse_rate']:>7.1f} "
               f"{occ(r['block_occupancy']):>8} "
               f"{occ(r['slot_occupancy']):>9} "
+              f"{occ(r['snapshot_occupancy']):>9} "
               f"{1e3 * r['swap_s']:>9.2f} "
               f"{r['modeled_tokens_per_s']:>14.0f} "
               f"{r['modeled_effective_tokens_per_s']:>12.0f} "
               f"{r['modeled_spec_speedup']:>7.2f}")
+        if args.require_snapshot_hits and \
+                not np.isnan(r["snapshot_occupancy"]) and (
+                    r["snapshot_hits"] == 0
+                    or r["skipped_prefill_tokens"] == 0):
+            failures.append(arch)
+    if failures:
+        raise SystemExit(
+            f"--require-snapshot-hits: no snapshot reuse on {failures} "
+            "(shared-prefix traffic should hit the slot snapshot index)")
 
 
 if __name__ == "__main__":

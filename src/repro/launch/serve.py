@@ -101,6 +101,7 @@ def serve(arch: str, *, smoke: bool = False, multi_pod: bool = False,
           block_size: int | None = None, prefill_chunk: int | None = None,
           accelerator: str = "OXBNN_50", verbose: bool = True,
           prefix_cache: bool = True, preempt_policy: str = "swap",
+          snapshot_slots: int = 0,
           temperature: float = 0.0, top_k: int = 0, top_p: float = 1.0,
           sampling_seed: int = 0, stop: tuple[int, ...] = (),
           spec_k: int = 0, spec_ngram: int = 3):
@@ -125,6 +126,7 @@ def serve(arch: str, *, smoke: bool = False, multi_pod: bool = False,
             accelerator=accelerator,
             prefix_cache=prefix_cache,
             preempt_policy=preempt_policy,
+            snapshot_slots=snapshot_slots,
             spec_k=spec_k, spec_ngram=spec_ngram)
         eng = Engine(params, cfg, ecfg)
         prompts = np.asarray(_prompts(cfg, batch, prompt_len, seed))
@@ -166,10 +168,17 @@ def serve(arch: str, *, smoke: bool = False, multi_pod: bool = False,
                   f"skipped_prefill={pc['skipped_prefill_tokens']} "
                   f"cow={pc['cow_copies']}; "
                   f"swaps out/in={sw['swap_outs']}/{sw['swap_ins']}")
+            if eng.cache.ssm is not None and pc["enabled"]:
+                print(f"[serve] slot-snapshots: "
+                      f"hits={pc['snapshot_hits']} "
+                      f"stores={pc['snapshot_stores']} "
+                      f"cached={pc['cached_snapshots']} "
+                      f"occupancy={100 * pc['snapshot_occupancy']:.0f}% "
+                      f"readopted={sw['readopted_snapshots']}")
             print(f"[serve] modeled {ph['accelerator']}: "
                   f"{ph['modeled_tokens_per_s']:.0f} tokens/s "
                   f"(effective {ph['modeled_effective_tokens_per_s']:.0f} "
-                  f"with prefix credit; bottleneck: "
+                  f"with pipelined prefill + prefix credit; bottleneck: "
                   f"{ph['bottleneck_stage']})")
         seqs = [out[r] for r in rids]
         if len({len(s) for s in seqs}) > 1:      # early stop: ragged
@@ -198,6 +207,10 @@ def main():
     ap.add_argument("--preempt-policy", default="swap",
                     choices=["swap", "recompute"],
                     help="swap-to-host (default) or recompute-on-resume")
+    ap.add_argument("--snapshot-slots", type=int, default=0,
+                    help="recurrent prefix-snapshot pool rows for "
+                         "SSM/hybrid stacks (0 = 2 * batch; gated by "
+                         "--prefix-cache)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = greedy)")
     ap.add_argument("--top-k", type=int, default=0,
@@ -219,6 +232,7 @@ def main():
           block_size=args.block_size, prefill_chunk=args.prefill_chunk,
           accelerator=args.accelerator, prefix_cache=args.prefix_cache,
           preempt_policy=args.preempt_policy,
+          snapshot_slots=args.snapshot_slots,
           greedy=args.temperature <= 0,     # legacy-loop sampling mode
           temperature=args.temperature,
           top_k=args.top_k, top_p=args.top_p,

@@ -218,6 +218,17 @@ def init_paged_state(cfg, num_slots: int, dtype=jnp.float32):
     }
 
 
+def copy_slot(dst_pool: dict, dst: Array, src_pool: dict,
+              src: Array) -> dict:
+    """Copy one slot's whole recurrent state (h, conv tail) between two
+    slot pools of any row counts — the prefix-snapshot store/restore
+    primitive (serving/mixer_state.py jits this with the destination
+    pool donated: store writes a live slot into the snapshot pool,
+    restore writes a snapshot row back into the live pool)."""
+    return {k: v.at[dst].set(src_pool[k][src].astype(v.dtype))
+            for k, v in dst_pool.items()}
+
+
 def snapshot_slots(cache, slots: Array) -> dict:
     """Device-side copy of each row's recurrent slot — taken BEFORE a
     multi-token verify so a partially-rejected speculative step can be

@@ -7,7 +7,8 @@ from repro.serving.engine import Engine, EngineConfig, nearest_rank  # noqa: F40
 from repro.serving.sampling import (                                # noqa: F401
     SamplingParams, prompt_lookup_draft, sample_tokens)
 from repro.serving.mixer_state import (                             # noqa: F401
-    MixerState, RecurrentSlotState, layer_layouts, ring_block_count)
+    MixerState, RecurrentSlotState, SlotSnapshotIndex, layer_layouts,
+    ring_block_count)
 from repro.serving.request import Request, State                    # noqa: F401
 from repro.serving.scheduler import (                               # noqa: F401
     Scheduler, SchedulerConfig, StepPlan)

@@ -56,7 +56,6 @@ composite over the block-family state and the recurrent-slot state
 from __future__ import annotations
 
 import functools
-import hashlib
 import time
 from collections import OrderedDict
 
@@ -66,9 +65,9 @@ import numpy as np
 
 from repro.layers import attn_block, mla
 from repro.models.transformer import layer_plan
-from repro.serving.mixer_state import (
-    LAYOUT_SLOT, MixerState, RecurrentSlotState, layer_layouts,
-    ring_block_count)
+from repro.serving.mixer_state import (                             # noqa: F401
+    LAYOUT_SLOT, MixerState, RecurrentSlotState, chunk_key,
+    layer_layouts, ring_block_count)
 
 
 # Pool updates outside the engine's step functions follow the same
@@ -160,15 +159,6 @@ class BlockAllocator:
             "scratch block entered circulation"
 
 
-def chunk_key(parent: str, tokens: np.ndarray) -> str:
-    """Content hash of one full token block, chained on the parent
-    block's key so equal windows at different prefix depths differ."""
-    h = hashlib.sha256()
-    h.update(parent.encode())
-    h.update(np.ascontiguousarray(tokens, np.int32).tobytes())
-    return h.hexdigest()
-
-
 class PrefixIndex:
     """hash-chain -> physical block, LRU-ordered for eviction.
 
@@ -178,11 +168,15 @@ class PrefixIndex:
     parent key: evicting a chain's head before its tail would leave
     unreachable entries that still pin blocks (a prompt walk breaks at
     the missing parent), so only entries no other entry chains from
-    are candidates, and freeing a leaf exposes its parent to the next
-    pass."""
+    are candidates, and freeing a leaf exposes its parent as the next
+    one.  The per-key child count is maintained incrementally by
+    insert/evict, so eviction under pool pressure is one walk over the
+    map plus O(1) per freed entry — not a rebuild of the whole parent
+    set per outer pass (O(len(map)^2) right when the pool is tight)."""
 
     def __init__(self):
         self._map: OrderedDict[str, tuple[int, str]] = OrderedDict()
+        self._children: dict[str, int] = {}   # key -> entries chained on it
         self.evictions = 0
 
     def __len__(self) -> int:
@@ -195,6 +189,12 @@ class PrefixIndex:
         self._map.move_to_end(key)
         return entry[0]
 
+    def peek(self, key: str) -> int | None:
+        """lookup without the LRU touch — for probes that only measure
+        chain depth and may never adopt the entry."""
+        entry = self._map.get(key)
+        return None if entry is None else entry[0]
+
     def insert(self, key: str, block: int, parent: str,
                allocator: BlockAllocator) -> bool:
         """Register block under key (index takes a reference); a
@@ -204,30 +204,51 @@ class PrefixIndex:
             return False
         allocator.incref(block)
         self._map[key] = (block, parent)
+        if parent:
+            self._children[parent] = self._children.get(parent, 0) + 1
         return True
 
     def evict(self, allocator: BlockAllocator, n: int) -> int:
         """Free up to n cached blocks nobody else references (leaf
-        entries in LRU order first); returns how many were freed."""
+        entries in LRU order first); returns how many were freed.
+        Evicting a leaf may turn its parent into a leaf — the parent is
+        re-examined immediately via the worklist instead of waiting for
+        another full pass."""
         freed = 0
-        while freed < n:
-            parents = {p for _, p in self._map.values()}
-            progress = False
-            for key in list(self._map):
-                if freed >= n:
-                    break
-                if key in parents:
-                    continue                     # a chain still needs it
-                block, _ = self._map[key]
-                if allocator.refcount(block) == 1:  # only the index holds it
-                    del self._map[key]
-                    allocator.decref(block)
-                    self.evictions += 1
-                    freed += 1
-                    progress = True
-            if not progress:
+        for key in list(self._map):
+            if freed >= n:
                 break
+            work = [key]
+            while work and freed < n:
+                k = work.pop()
+                if k not in self._map or self._children.get(k, 0):
+                    continue                 # gone, or a chain needs it
+                block, parent = self._map[k]
+                if allocator.refcount(block) != 1:
+                    continue                 # a sequence still reads it
+                del self._map[k]
+                allocator.decref(block)
+                self.evictions += 1
+                freed += 1
+                if parent:
+                    self._children[parent] -= 1
+                    if not self._children[parent]:
+                        del self._children[parent]
+                        work.append(parent)  # newly a leaf: retry now
         return freed
+
+    def check(self):
+        """Assert the incremental child counts match a full recount and
+        no surviving entry's parent was evicted from under it (used by
+        the property tests)."""
+        recount: dict[str, int] = {}
+        for _, parent in self._map.values():
+            if parent:
+                recount[parent] = recount.get(parent, 0) + 1
+        assert recount == self._children, "child counts drifted"
+        for key, (_, parent) in self._map.items():
+            assert not parent or parent in self._map, \
+                f"entry {key} orphaned (parent evicted first)"
 
 
 class BlockKVCache(MixerState):
@@ -341,24 +362,33 @@ class BlockKVCache(MixerState):
 
     # ---------------------------------------------------- prefix cache
 
-    def match_prefix(self, prompt: np.ndarray) -> tuple[list[int], int, str]:
+    def match_prefix(self, prompt: np.ndarray,
+                     max_tokens: int | None = None, *,
+                     touch: bool = True
+                     ) -> tuple[list[int], int, str]:
         """Walk the prompt's full-block hash chain through the index.
 
         Returns (matched block ids NOT yet increfed, tokens covered,
         chain key of the last match).  A full-prompt match keeps every
         block but re-prefills the final token, so the caller always has
         one prefill position left to produce first-token logits (the
-        write lands in a shared block — copy-on-write handles it)."""
-        if self.prefix is None:
+        write lands in a shared block — copy-on-write handles it).
+        ``max_tokens`` caps the match depth — hybrid stacks pass the
+        slot-snapshot depth so both families resume from one position.
+        ``touch=False`` probes without promoting entries in LRU order
+        (the hybrid depth probe may never adopt what it measures)."""
+        if self.prefix is None or not len(self.prefix):
             return [], 0, ""
         bs = self.block_size
         n_full = len(prompt) // bs
         if self.ring_blocks:
             n_full = min(n_full, self.ring_blocks)
+        if max_tokens is not None:
+            n_full = min(n_full, max_tokens // bs)
         blocks, parent = [], ""
         for j in range(n_full):
             key = chunk_key(parent, prompt[j * bs:(j + 1) * bs])
-            b = self.prefix.lookup(key)
+            b = self.prefix.lookup(key) if touch else self.prefix.peek(key)
             if b is None:
                 break
             blocks.append(b)
@@ -368,12 +398,12 @@ class BlockKVCache(MixerState):
             n_tok = len(prompt) - 1
         return blocks, n_tok, parent
 
-    def alloc_prompt(self, req) -> bool:
+    def alloc_prompt(self, req, max_match: int | None = None) -> bool:
         """Admission-time allocation: adopt prefix-cached blocks for the
         matched prompt head, allocate fresh blocks for the rest, and
         start the request at ``pos = matched tokens`` (prefill skip).
         All-or-nothing; False when the pool is short."""
-        matched, n_tok, parent = self.match_prefix(req.prompt)
+        matched, n_tok, parent = self.match_prefix(req.prompt, max_match)
         for b in matched:           # pin before _alloc may evict LRU entries
             self.allocator.incref(b)
         need = self.blocks_needed(req.prompt_len) - len(matched)
@@ -394,6 +424,8 @@ class BlockKVCache(MixerState):
             n_full = req.prompt_len // self.block_size
             if self.ring_blocks:
                 n_full = min(n_full, self.ring_blocks)
+            if max_match is not None:
+                n_full = min(n_full, max_match // self.block_size)
             self.prefix_queries += min(len(matched) + 1, n_full)
             self.prefix_hits += len(matched)
         self.skipped_prefill_tokens += n_tok
@@ -561,7 +593,7 @@ class MixerStateCache:
     def __init__(self, cfg, *, num_blocks: int, block_size: int,
                  max_model_len: int, dtype=np.float32,
                  prefix_cache: bool = True, num_slots: int = 8,
-                 prefill_chunk: int = 16):
+                 prefill_chunk: int = 16, snapshot_slots: int = 16):
         self.cfg = cfg
         self.block_size = block_size
         self.layouts = layer_layouts(cfg)
@@ -572,17 +604,20 @@ class MixerStateCache:
         self.ring_blocks = (
             ring_block_count(cfg.sliding_window, block_size, prefill_chunk)
             if (attn_ids and cfg.sliding_window) else 0)
-        # recurrent state cannot be adopted mid-stream: once any layer
-        # keeps a slot, shared prompt blocks buy nothing (the slot
-        # would still have to be recomputed), so the prefix index is
-        # only enabled for pure block-family stacks
-        prefix = bool(prefix_cache and attn_ids and not slot_ids)
         self.attn = BlockKVCache(
             cfg, num_blocks=num_blocks, block_size=block_size,
-            max_model_len=max_model_len, dtype=dtype, prefix_cache=prefix,
+            max_model_len=max_model_len, dtype=dtype,
+            prefix_cache=bool(prefix_cache),
             layer_ids=attn_ids, ring_blocks=self.ring_blocks) \
             if attn_ids else None
-        self.ssm = RecurrentSlotState(cfg, slot_ids, num_slots, dtype) \
+        # recurrent state cannot be adopted by aliasing storage, but it
+        # CAN be restored: slot layers run the content-addressed
+        # snapshot index, and alloc_prompt below reconciles its depth
+        # with the attn block chain so hybrids skip shared heads too
+        self.ssm = RecurrentSlotState(
+            cfg, slot_ids, num_slots, dtype, block_size=block_size,
+            snapshot_slots=snapshot_slots if prefix_cache else 0,
+            prefill_chunk=prefill_chunk) \
             if slot_ids else None
         self.swap_outs = 0          # request-level (hybrids swap both
         self.swap_ins = 0           # families in one event)
@@ -625,12 +660,40 @@ class MixerStateCache:
     # ------------------------------------------------------ lifecycle
 
     def alloc_prompt(self, req) -> bool:
-        if self.ssm is not None and not self.ssm.alloc_prompt(req):
+        """Admission-time allocation with a JOINT prefix match: every
+        layer must resume prefill from the same position, so the attn
+        block-chain depth and the slot snapshot depth are reconciled to
+        their common prefix — the attn side adopts blocks only down to
+        the snapshot depth, the slot side restores that snapshot, and
+        the request starts past the matched tokens.  A hybrid with
+        snapshots disabled adopts nothing (the slot would still have to
+        be recomputed from position 0)."""
+        cap = None
+        match = (0, "", 0)
+        if self.ssm is not None:
+            limit = None
+            if self.attn is not None and self.ssm.snapshots is not None:
+                # probe the attn chain first (no LRU touch — entries
+                # past the snapshot cap are never adopted): a snapshot
+                # deeper than the adoptable block chain cannot be
+                # resumed from
+                _, attn_tok, _ = self.attn.match_prefix(req.prompt,
+                                                        touch=False)
+                limit = attn_tok
+            match = self.ssm.match_prefix(req.prompt, limit=limit)
+            cap = match[0]
+        if self.ssm is not None and \
+                not self.ssm.alloc_prompt(req, match, count=False):
             return False
-        if self.attn is not None and not self.attn.alloc_prompt(req):
+        if self.attn is not None and \
+                not self.attn.alloc_prompt(req, max_match=cap):
             if self.ssm is not None:
                 self.ssm.release(req)
+                req.pos = req.skipped_prefill = 0
+                req.snap_registered, req.snap_key = 0, ""
             return False
+        if self.ssm is not None:
+            self.ssm.count_match(match)
         return True
 
     def ensure_capacity(self, req, n_tokens: int) -> bool:
@@ -656,6 +719,8 @@ class MixerStateCache:
     def register_prefix(self, req):
         if self.attn is not None:
             self.attn.register_prefix(req)
+        if self.ssm is not None:
+            self.ssm.register_snapshot(req)
 
     def swap_out(self, req):
         if self.attn is not None and req.blocks:
@@ -665,18 +730,26 @@ class MixerStateCache:
         self.swap_outs += 1
 
     def swap_in(self, req) -> bool | None:
-        # slot availability precheck so a block restore never has to be
-        # rolled back when the slot pool comes up short
-        if self.ssm is not None and req.slot is None \
-                and self.ssm.allocator.num_free < 1:
-            return False
+        if self.ssm is not None:
+            # snapshot re-adoption peek FIRST: if the parked snapshot
+            # was evicted, the whole request falls back to recompute
+            # before any block restore ran (nothing to roll back)
+            if req.snap_readopt and (
+                    self.ssm.snapshots is None
+                    or self.ssm.snapshots.lookup(req.snap_key) is None):
+                return None
+            # slot availability precheck so a block restore never has
+            # to be rolled back when the slot pool comes up short
+            if req.slot is None and self.ssm.allocator.num_free < 1:
+                return False
         if self.attn is not None and req.host_kv is not None:
             ok = self.attn.swap_in(req)
             if ok is not True:
                 return ok
-        if self.ssm is not None and req.host_state is not None:
+        if self.ssm is not None and (req.host_state is not None
+                                     or req.snap_readopt):
             restored = self.ssm.swap_in(req)
-            assert restored, "slot precheck above guarantees a free slot"
+            assert restored, "slot/snapshot prechecks guarantee success"
         self.swap_ins += 1
         return True
 
@@ -702,22 +775,41 @@ class MixerStateCache:
         if self.attn is not None:
             self.attn.reset_stats(flush_prefix=flush_prefix)
         if self.ssm is not None:
-            self.ssm.reset_stats()
+            self.ssm.reset_stats(flush_snapshots=flush_prefix)
         self.swap_outs = self.swap_ins = 0
 
     def prefix_section(self) -> dict:
-        a = self.attn
-        enabled = a is not None and a.prefix is not None
+        a, s = self.attn, self.ssm
+        snaps = s.snapshots if s is not None else None
+        enabled = (a is not None and a.prefix is not None) \
+            or snaps is not None
+        queries = (a.prefix_queries if a else 0) \
+            + (s.snap_queries if s else 0)
+        hits = (a.prefix_hits if a else 0) + (s.snap_hits if s else 0)
+        # a hybrid's joint match skips the SAME tokens in both families
+        # — count them once (the depths agree by construction)
+        skipped = (a.skipped_prefill_tokens if a is not None
+                   else (s.skipped_prefill_tokens if s else 0))
         return {
             "enabled": enabled,
-            "queries": a.prefix_queries if a else 0,
-            "hits": a.prefix_hits if a else 0,
-            "hit_rate": (a.prefix_hits / a.prefix_queries
-                         if a and a.prefix_queries else 0.0),
-            "skipped_prefill_tokens": a.skipped_prefill_tokens if a else 0,
+            "queries": queries,
+            "hits": hits,
+            "hit_rate": hits / queries if queries else 0.0,
+            "skipped_prefill_tokens": skipped,
             "cow_copies": a.cow_copies if a else 0,
-            "cached_blocks": len(a.prefix) if enabled else 0,
-            "evictions": a.prefix.evictions if enabled else 0,
+            "cached_blocks": (len(a.prefix)
+                              if a is not None and a.prefix is not None
+                              else 0),
+            "evictions": (a.prefix.evictions
+                          if a is not None and a.prefix is not None
+                          else 0),
+            "snapshot_queries": s.snap_queries if s else 0,
+            "snapshot_hits": s.snap_hits if s else 0,
+            "snapshot_stores": snaps.stores if snaps else 0,
+            "cached_snapshots": len(snaps) if snaps else 0,
+            "snapshot_evictions": snaps.evictions if snaps else 0,
+            "snapshot_occupancy": (snaps.peak_used / snaps.capacity
+                                   if snaps else 0.0),
         }
 
     def swap_section(self) -> dict:
@@ -728,6 +820,7 @@ class MixerStateCache:
             "swapped_blocks": a.swapped_blocks if a else 0,
             "readopted_blocks": a.readopted_blocks if a else 0,
             "swapped_slots": s.swapped_slots if s else 0,
+            "readopted_snapshots": s.readopted_snapshots if s else 0,
             "swap_out_s": (a.swap_out_s if a else 0.0)
                           + (s.snapshot_out_s if s else 0.0),
             "swap_in_s": (a.swap_in_s if a else 0.0)

@@ -172,22 +172,55 @@ class PhotonicCostModel:
                 committed_tokens * self.token_latency_s / spent,
         }
 
+    def prefill_latency_s(self, n_tokens: int, n_passes: int) -> float:
+        """Modeled latency of chunked prefill: n tokens streamed
+        through the weight-stationary pipeline in n_passes chunk-sized
+        forwards — n bottleneck intervals plus one fill per pass, the
+        SAME accounting ``verify_latency_s`` applies to the identical
+        prefill-shaped forward (one pass of n tokens ==
+        ``verify_latency_s(n)``).  The old model charged every prefill
+        token a full sequential token latency, so the prefill and
+        verify sides of the report disagreed about the same GEMMs.
+
+        Skipped-prefix credit applies per token regardless of family:
+        a prompt token adopted from the block index skipped its
+        attention projections, one resumed from a slot snapshot skipped
+        its SSD chunk matmuls — both are whole rows of ``gemm_specs``
+        that never ran."""
+        return n_tokens * self.pipeline_interval_s + n_passes * self.fill_s
+
     def serving_report(self, *, prefill_tokens: int, decode_tokens: int,
-                       skipped_tokens: int = 0) -> dict:
-        """Modeled accelerator cost of a served token stream.  Prompt
+                       skipped_tokens: int = 0,
+                       prefill_passes: int | None = None,
+                       prefill_chunk: int = 16) -> dict:
+        """Modeled accelerator cost of a served token stream: decode
+        tokens are sequential (batch-1 accelerator), prefill tokens are
+        pipelined per chunk pass (``prefill_latency_s``).  Prompt
         tokens adopted from the prefix cache never ran their GEMMs, so
         they cost nothing on the modeled OXBNN either — the effective
-        rate credits them as served for free."""
+        rate credits them as served, and ``prefill_skip_speedup`` is
+        the wall ratio against prefilling them in full chunks."""
+        chunk = max(prefill_chunk, 1)
+        if prefill_passes is None:
+            prefill_passes = -(-prefill_tokens // chunk)
         computed = prefill_tokens + decode_tokens
-        wall = self.step_latency_s(computed)
+        wall = (self.step_latency_s(decode_tokens)
+                + self.prefill_latency_s(prefill_tokens, prefill_passes))
+        # counterfactual: the skipped prompt tokens prefilled in chunks.
+        # Extra fills are FLOOR(skipped / chunk): a partial-chunk
+        # remainder merges into the request's first real prefill pass,
+        # which ``prefill_passes`` already charges — exact for
+        # slot-snapshot skips (always chunk-grid multiples), a
+        # non-inflating lower bound for block-aligned attn skips.
+        wall_no_skip = wall + self.prefill_latency_s(
+            skipped_tokens, skipped_tokens // chunk)
         return {
             "modeled_wall_s": wall,
             "modeled_tokens_per_s": self.modeled_tokens_per_s,
             "modeled_effective_tokens_per_s": (
                 (computed + skipped_tokens) / wall if wall
                 else self.modeled_tokens_per_s),
-            "prefill_skip_speedup": (
-                (computed + skipped_tokens) / computed if computed else 1.0),
+            "prefill_skip_speedup": wall_no_skip / wall if wall else 1.0,
         }
 
     def report(self) -> dict:

@@ -81,6 +81,9 @@ class EngineConfig:
     prefix_cache: bool = True        # content-addressed prompt block reuse
     preempt_policy: str = "swap"     # swap | recompute (fallback)
     num_slots: int = 0               # recurrent slots; 0 = max_batch + 1
+    snapshot_slots: int = 0          # recurrent prefix-snapshot pool rows
+                                     # (0 = 2 * max_batch; gated by
+                                     # prefix_cache like the block index)
     spec_k: int = 0                  # speculative draft length (0 = off)
     spec_ngram: int = 3              # max n-gram for prompt-lookup drafts
 
@@ -96,7 +99,8 @@ class Engine:
             max_model_len=ecfg.max_model_len,
             prefix_cache=ecfg.prefix_cache,
             num_slots=ecfg.num_slots or ecfg.max_batch + 1,
-            prefill_chunk=ecfg.prefill_chunk)
+            prefill_chunk=ecfg.prefill_chunk,
+            snapshot_slots=ecfg.snapshot_slots or 2 * ecfg.max_batch)
         # ring rollback safety: stale speculative writes must only ever
         # clobber positions already outside the attention window, which
         # the prefill-sized ring guarantees when the verify chunk is no
@@ -119,6 +123,7 @@ class Engine:
         self._wall_s = 0.0
         self._decoded = 0
         self._prefilled = 0
+        self._prefill_calls = 0          # chunked-prefill passes (cost model)
         self._max_concurrent = 0
         self._decode_calls = 0
         self._decode_rows = 0            # scheduled rows across decode calls
@@ -286,6 +291,7 @@ class Engine:
         self.cache.pools = pools
         req.pos += chunk
         self._prefilled += chunk
+        self._prefill_calls += 1
         self.cache.register_prefix(req)
         self.scheduler._ev(step, "prefill", req.rid, tokens=chunk,
                            pos=req.pos)
@@ -435,14 +441,22 @@ class Engine:
             m = int(n_commit[i])
             self._verify_tokens += int(n_valid[i])
             self._draft_tokens += int(n_valid[i]) - 1
-            self._draft_accepted += m - 1
+            committed = 0
             for jj in range(m):
                 r.pos += 1
                 r.out.append(int(sampled[i, jj]))
                 self._decoded += 1
-                committed_total += 1
+                committed += 1
                 if r.done:      # stop/max_new mid-draft: finish here —
                     break       # the request's state is released anyway
+            # credit only draft tokens that actually COMMITTED: a stop
+            # landing mid-draft truncates the accepted prefix, and
+            # counting the full m - 1 would inflate acceptance_rate
+            # relative to the tokens the stream really contains (the
+            # last committed token is the verifier's own bonus token
+            # only when the whole accepted prefix made it in)
+            self._draft_accepted += min(committed, m - 1)
+            committed_total += committed
             if r.done:
                 self.scheduler.finish(step, r)
                 r.finish_s = now
@@ -461,7 +475,7 @@ class Engine:
         or scheduler state — benches call this after jit warmup so the
         measured window starts from a clean slate."""
         self._wall_s = 0.0
-        self._decoded = self._prefilled = 0
+        self._decoded = self._prefilled = self._prefill_calls = 0
         self._max_concurrent = 0
         self._decode_calls = self._decode_rows = self._decode_produced = 0
         self._spec_steps = self._spec_rows = 0
@@ -505,7 +519,9 @@ class Engine:
                 **self.cost_model.serving_report(
                     prefill_tokens=self._prefilled,
                     decode_tokens=self._decoded,
-                    skipped_tokens=prefix["skipped_prefill_tokens"]),
+                    skipped_tokens=prefix["skipped_prefill_tokens"],
+                    prefill_passes=self._prefill_calls,
+                    prefill_chunk=self.ecfg.prefill_chunk),
                 **self.cost_model.speculative_report(
                     verify_passes=self._spec_rows,
                     verify_tokens=self._verify_tokens,

@@ -56,6 +56,11 @@ class Request:
     swap_readopt: int = 0              # leading blocks to re-adopt by hash
     # swap-to-host: per-layer slot snapshots (recurrent family)
     host_state: list | None = None
+    # slot-snapshot prefix bookkeeping (owned by RecurrentSlotState)
+    snap_registered: int = 0           # deepest published snapshot (blocks)
+    snap_key: str = ""                 # hash-chain key at that depth
+    snap_readopt: bool = False         # parked state == a registered
+                                       # snapshot: swap_in re-adopts by hash
     # step/time marks for latency accounting
     submit_step: int | None = None
     admit_step: int | None = None
@@ -103,6 +108,9 @@ class Request:
         self.skipped_prefill = 0
         self.n_registered = 0
         self.prefix_key = ""
+        self.snap_registered = 0
+        self.snap_key = ""
+        self.snap_readopt = False
         self.virtual_blocks = 0
         self.preemptions += 1
 

@@ -54,3 +54,15 @@ def family_models():
         params, _ = M.init(jax.random.PRNGKey(0), cfg)
         out[fam] = (cfg, params)
     return out
+
+
+@pytest.fixture(scope="session")
+def jamba_models():
+    """Reduced jamba hybrid (SSD slots + periodic paged attention)."""
+    from repro import configs
+    from repro.configs.base import reduced
+    from repro.models import transformer as M
+    cfg = reduced(configs.get_config("jamba-1.5-large-398b")).replace(
+        precision="bnn")
+    params, _ = M.init(jax.random.PRNGKey(0), cfg)
+    return cfg, params

@@ -21,7 +21,7 @@ try:
 except ImportError:  # tiny deterministic fallback (tests/_hypothesis_shim.py)
     from _hypothesis_shim import given, settings, strategies as st
 
-from repro.serving import BlockAllocator
+from repro.serving import BlockAllocator, PrefixIndex
 
 # per-test @settings, NOT a register_profile("ci")/load_profile pair:
 # other test modules re-register that global profile with fewer
@@ -103,6 +103,68 @@ def test_double_free_always_raises(num_blocks, seed):
     assert (a.num_free, a.num_used) == before  # failed free changed nothing
     with pytest.raises(ValueError):
         a.incref(rng.choice(got))              # can't share a freed block
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(8, 64), st.integers(0, 2 ** 31 - 1))
+def test_prefix_evict_maintains_chains_incrementally(num_blocks, seed):
+    """Random chain growth / adoption pinning / partial evictions: the
+    incremental child counts must track a full recount exactly, no
+    surviving entry may be orphaned (parent evicted first), pinned
+    entries and their ancestors always survive, and a full-size evict
+    with nothing pinned drains the index completely."""
+    rng = random.Random(seed)
+    a = BlockAllocator(num_blocks)
+    idx = PrefixIndex()
+    tips = [""]                   # chain tips to extend (root included)
+    pinned: dict[str, int] = {}   # key -> block, extra ref held
+    serial = 0
+
+    for _ in range(100):
+        op = rng.choice(["insert", "insert", "insert", "pin", "unpin",
+                         "evict"])
+        if op == "insert":
+            got = a.alloc(1)
+            if got is None:
+                idx.evict(a, 1)
+                tips = [""] + [k for k in tips if k in idx._map]
+                got = a.alloc(1)
+            if got is None:
+                continue
+            # parents are always resident at insert time: a real
+            # request holds refs on its chain's blocks, so ancestors
+            # of a chain being extended are unevictable
+            parent = rng.choice(tips)
+            key = f"k{serial}"
+            serial += 1
+            idx.insert(key, got[0], parent, a)
+            a.decref(got[0])      # producer leaves; only the index holds it
+            tips.append(key)
+        elif op == "pin" and len(idx._map) > len(pinned):
+            key = rng.choice([k for k in idx._map if k not in pinned])
+            block = idx._map[key][0]
+            a.incref(block)       # a sequence adopts the cached block
+            pinned[key] = block
+        elif op == "unpin" and pinned:
+            key = rng.choice(list(pinned))
+            a.decref(pinned.pop(key))
+        elif op == "evict":
+            before = len(idx)
+            freed = idx.evict(a, rng.randint(0, num_blocks))
+            assert freed == before - len(idx)
+            tips = [""] + [k for k in tips if k in idx._map]
+        idx.check()
+        a.check()
+        # pinned entries (and, via check(), their ancestors) survive
+        assert all(k in idx._map for k in pinned)
+
+    # drain: with every pin released, evicting the full size leaves
+    # nothing behind and every block returns to the free list
+    for key, block in pinned.items():
+        a.decref(block)
+    idx.evict(a, len(idx))
+    assert len(idx) == 0 and idx._children == {}
+    assert a.num_free == a.capacity
 
 
 @settings(max_examples=25, deadline=None)

@@ -15,7 +15,6 @@ Contracts under test:
     reproduces sampled non-spec decoding, and partial draft acceptance
     rolls back correctly on SSM slots and ring tables.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -387,6 +386,52 @@ def test_spec_full_acceptance_commits_multiple_tokens(
     assert spec.stats()["photonic"]["modeled_spec_speedup"] > 1.0
 
 
+def test_spec_stop_mid_draft_clamps_acceptance(bnn_cfg, bnn_params,
+                                               monkeypatch):
+    """Regression: a stop token landing mid-draft truncates the commit
+    loop, and the accepted-token counter must follow the COMMITTED
+    prefix — the old code added m - 1 before the loop, so acceptance
+    (and acceptance_rate) read inflated relative to the tokens the
+    stream actually contains."""
+    rng = np.random.default_rng(12)
+    prompt = rng.integers(0, bnn_cfg.vocab, 7)
+    plain = _engine(bnn_cfg, bnn_params, max_model_len=24)
+    gold = _gen(plain, plain.submit(prompt, 8))
+    # stop at the first generated token that did not appear earlier in
+    # the generation (a repeat would end the run before the draft)
+    stop_at = next(i for i in range(1, len(gold))
+                   if gold[i] not in gold[:i])
+    stop_tok = int(gold[stop_at])
+
+    import repro.serving.engine as E
+
+    def oracle(seq, k, ngram):
+        g = len(seq) - len(prompt)
+        return np.asarray(gold[g:g + k], np.int32)
+
+    monkeypatch.setattr(E, "prompt_lookup_draft", oracle)
+    eng = _engine(bnn_cfg, bnn_params, spec_k=3, max_model_len=24)
+    rid = eng.submit(prompt, 8, sampling=SamplingParams(stop=(stop_tok,)))
+    out = eng.run()[rid]
+    # the run ends AT the stop token, tokens identical to plain greedy
+    np.testing.assert_array_equal(out[len(prompt):], gold[:stop_at + 1])
+    sp = eng.stats()["speculative"]
+    assert sp["draft_tokens"] > 0
+    # committed draft tokens: everything after the prefill-produced
+    # first token up to and including the stop, minus verifier bonus
+    # tokens (one per FULLY-committed verify step)
+    spec_events = [e for e in eng.scheduler.trace
+                   if e["event"] == "spec_decode"]
+    committed = sum(e["committed"] for e in spec_events)
+    full_steps = len(spec_events) - 1        # last step stopped mid-draft
+    assert sp["accepted_tokens"] == committed - full_steps
+    assert sp["acceptance_rate"] <= 1.0
+    assert sp["acceptance_rate"] == pytest.approx(
+        sp["accepted_tokens"] / sp["draft_tokens"])
+    # the old accounting would have credited the full accepted prefix
+    assert sp["accepted_tokens"] < sp["draft_tokens"]
+
+
 def test_scheduler_budget_charges_speculative_rows(bnn_cfg):
     """max_batched_tokens must account for verify width: a decode row
     in a speculative engine burns up to spec_k+1 compute tokens per
@@ -414,16 +459,11 @@ def test_engine_wires_decode_cost_from_spec_k(bnn_cfg, bnn_params):
 
 
 @pytest.mark.slow
-def test_spec_greedy_matches_plain_greedy_hybrid_jamba():
+def test_spec_greedy_matches_plain_greedy_hybrid_jamba(jamba_models):
     """Hybrid stacks (jamba: SSD slots + periodic paged attention)
     speculate too: the repair pass restores slot layers while block
     layers rewind — one verify step drives both rollbacks."""
-    from repro import configs
-    from repro.configs.base import reduced
-    from repro.models import transformer as M
-    cfg = reduced(configs.get_config("jamba-1.5-large-398b")).replace(
-        precision="bnn")
-    params, _ = M.init(jax.random.PRNGKey(0), cfg)
+    cfg, params = jamba_models
     spec, want, got = _spec_vs_plain(cfg, params, max_model_len=24)
     assert spec.cache.ssm is not None and spec.cache.attn is not None
     assert spec.stats()["speculative"]["draft_tokens"] > 0

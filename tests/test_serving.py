@@ -337,6 +337,55 @@ def test_photonic_speculative_speedup_model(bnn_cfg):
         committed_tokens=0)["modeled_spec_speedup"] == 1.0
 
 
+def test_serving_report_prefill_matches_verify_model(bnn_cfg):
+    """Regression: serving_report used to charge every prefill token a
+    FULL sequential token latency while verify_latency_s priced the
+    identical prefill-shaped forward as n pipeline intervals + one
+    fill.  Both sides must now agree: one chunk pass of n tokens costs
+    exactly verify_latency_s(n), decode stays batch-1 sequential, and
+    the skip speedup is a wall ratio under the same model."""
+    cm = PhotonicCostModel(bnn_cfg, "OXBNN_50")
+    assert cm.prefill_latency_s(5, 1) == pytest.approx(
+        cm.verify_latency_s(5))
+    rep = cm.serving_report(prefill_tokens=8, decode_tokens=0,
+                            prefill_passes=2)
+    assert rep["modeled_wall_s"] == pytest.approx(
+        2 * cm.verify_latency_s(4))
+    rep = cm.serving_report(prefill_tokens=0, decode_tokens=3)
+    assert rep["modeled_wall_s"] == pytest.approx(
+        3 * cm.token_latency_s)
+    # effective rate and skip speedup come from ONE wall model now
+    rep = cm.serving_report(prefill_tokens=4, decode_tokens=4,
+                            skipped_tokens=8, prefill_passes=1,
+                            prefill_chunk=4)
+    wall = (4 * cm.token_latency_s + cm.prefill_latency_s(4, 1))
+    assert rep["modeled_wall_s"] == pytest.approx(wall)
+    assert rep["modeled_effective_tokens_per_s"] == pytest.approx(
+        (4 + 4 + 8) / wall)
+    assert rep["prefill_skip_speedup"] == pytest.approx(
+        (wall + cm.prefill_latency_s(8, 2)) / wall)
+    assert rep["prefill_skip_speedup"] > 1.0
+    # non-chunk-aligned skip: the partial-chunk remainder merges into
+    # the request's first charged pass — floor(5/4) = 1 extra fill
+    rep = cm.serving_report(prefill_tokens=3, decode_tokens=0,
+                            skipped_tokens=5, prefill_passes=1,
+                            prefill_chunk=4)
+    assert rep["modeled_wall_s"] == pytest.approx(
+        cm.prefill_latency_s(3, 1))
+    assert rep["prefill_skip_speedup"] == pytest.approx(
+        (cm.prefill_latency_s(3, 1) + cm.prefill_latency_s(5, 1))
+        / cm.prefill_latency_s(3, 1))
+    # no skipped tokens -> no claimed speedup; empty stream degenerates
+    assert cm.serving_report(prefill_tokens=4, decode_tokens=4)[
+        "prefill_skip_speedup"] == pytest.approx(1.0)
+    assert cm.serving_report(prefill_tokens=0, decode_tokens=0)[
+        "prefill_skip_speedup"] == 1.0
+    # unspecified pass count falls back to ceil(tokens / chunk)
+    assert cm.serving_report(prefill_tokens=9, decode_tokens=0,
+                             prefill_chunk=4)["modeled_wall_s"] == \
+        pytest.approx(cm.prefill_latency_s(9, 3))
+
+
 def test_photonic_cost_model_report(bnn_cfg):
     cm = PhotonicCostModel(bnn_cfg, "OXBNN_50")
     rep = cm.report()

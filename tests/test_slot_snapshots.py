@@ -1,0 +1,377 @@
+"""Recurrent-state prefix caching (SlotSnapshotIndex).
+
+The contract: snapshots change COST, never results.  Shared-prefix
+mamba2/jamba traffic must be token-identical with snapshots on vs off
+— greedy and sampled, including forced preempt/swap cycles and the
+``swap_lost`` recompute fallback when a parked snapshot is evicted —
+while the on-run reports ``skipped_prefill_tokens > 0`` and snapshot
+hits.  Unit layers cover the index (LRU, dedup, capacity recycling)
+and the match semantics (standalone depths, the prompt_len - 1 cap,
+hybrid depth reconciliation).
+"""
+import numpy as np
+import pytest
+
+from repro.layers import mamba2
+from repro.serving import (Request, SamplingParams, SlotSnapshotIndex,
+                           State, chunk_key)
+from repro.serving.mixer_state import RecurrentSlotState
+from test_serving import _engine  # fixtures live in conftest.py
+
+
+def _keys(prompt, bs, n):
+    """Chain keys for the first n full blocks of prompt."""
+    parent, out = "", []
+    for j in range(n):
+        parent = chunk_key(parent,
+                           np.asarray(prompt[j * bs:(j + 1) * bs], np.int32))
+        out.append(parent)
+    return out
+
+
+def _gen(eng, rid):
+    req = eng.requests[rid]
+    return eng.run()[rid][req.prompt_len:]
+
+
+# ----------------------------------------------------------- index level
+
+
+def test_snapshot_index_lru_dedup_and_recycling(family_models):
+    cfg, _ = family_models["ssm"]
+    live = [mamba2.init_paged_state(cfg, 3) for _ in range(2)]
+    idx = SlotSnapshotIndex(cfg, 2, 2)
+    assert idx.store("a", live, 1)
+    assert not idx.store("a", live, 1)       # dedup keeps the row
+    assert idx.store("b", live, 2)
+    assert len(idx) == 2 and idx.stores == 2 and idx.evictions == 0
+    idx.lookup("a")                          # a becomes most-recent
+    assert idx.store("c", live, 1)           # full pool: LRU entry b goes
+    assert idx.evictions == 1 and len(idx) == 2
+    assert "b" not in idx and "a" in idx and "c" in idx
+    idx.flush()
+    assert len(idx) == 0 and sorted(idx._free) == [0, 1]
+    with pytest.raises(ValueError):
+        SlotSnapshotIndex(cfg, 2, 0)
+
+
+def test_snapshot_restore_reproduces_stored_state(family_models):
+    """alloc_prompt restores the EXACT bits the snapshot captured."""
+    cfg, _ = family_models["ssm"]
+    st = RecurrentSlotState(cfg, [0, 1], num_slots=4,
+                            block_size=4, snapshot_slots=2)
+    prompt = np.arange(9, dtype=np.int32)
+    key = _keys(prompt, 4, 1)[0]
+    for li in range(2):
+        st.pools[li] = {k: v.at[1].add(2.5 + li)
+                        for k, v in st.pools[li].items()}
+    want = [{k: np.asarray(v[1]) for k, v in st.pools[li].items()}
+            for li in range(2)]
+    st.snapshots.store(key, st.pools, 1)
+
+    r = Request(0, prompt, 4)
+    match = st.match_prefix(prompt)
+    assert match[0] == 4 and match[1] == key
+    assert st.alloc_prompt(r, match)
+    assert r.pos == r.skipped_prefill == 4
+    assert r.snap_registered == 1 and r.snap_key == key
+    for li in range(2):
+        for k, v in want[li].items():
+            np.testing.assert_array_equal(
+                np.asarray(st.pools[li][k][r.slot]), v)
+    assert st.snap_hits == 1 and st.skipped_prefill_tokens == 4
+
+
+def test_match_prefix_standalone_depths(family_models):
+    cfg, _ = family_models["ssm"]
+    st = RecurrentSlotState(cfg, [0, 1], num_slots=4,
+                            block_size=4, snapshot_slots=4)
+    prompt = np.arange(13, dtype=np.int32)
+    k1, k2, k3 = _keys(prompt, 4, 3)
+    assert st.match_prefix(prompt) == (0, "", 3)
+    # a depth-2 entry matches even with depth 1 missing: snapshots are
+    # standalone whole-state captures, not a chained block walk
+    st.snapshots.store(k2, st.pools, 0)
+    assert st.match_prefix(prompt) == (8, k2, 3)
+    st.snapshots.store(k3, st.pools, 0)
+    assert st.match_prefix(prompt)[0] == 12   # deepest entry wins
+    # hybrid reconciliation: the attn chain depth caps the match
+    assert st.match_prefix(prompt, limit=9)[0] == 8
+    assert st.match_prefix(prompt, limit=3)[0] == 0
+    # a block-multiple prompt never adopts FULL depth — one token must
+    # prefill for first-token logits, and replaying it from the
+    # full-prompt state would fold it into the recurrence twice
+    p12 = prompt[:12]
+    assert _keys(p12, 4, 3)[2] == k3
+    assert st.match_prefix(p12) == (8, k2, 2)
+
+
+# ---------------------------------------------------------- engine level
+
+
+def _shared_prompts(cfg, seed=0, head=8, tails=(3, 2)):
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, cfg.vocab, head)
+    return [np.concatenate([shared, rng.integers(0, cfg.vocab, t)])
+            .astype(np.int32) for t in tails]
+
+
+def _run_pair(cfg, params, prompts, gen=6, sampling=None, **ekw):
+    """Submit prompts back-to-back (second sees the first's snapshots);
+    returns (engine, outputs, prefill chunk counts)."""
+    eng = _engine(cfg, params, **ekw)
+    outs, chunks = [], []
+    for i, p in enumerate(prompts):
+        rid = eng.submit(p, gen, sampling=sampling)
+        out = eng.run()
+        outs.append(out[rid])
+        chunks.append(sum(1 for e in eng.scheduler.trace
+                          if e["event"] == "prefill" and e["rid"] == rid))
+    return eng, outs, chunks
+
+
+@pytest.mark.parametrize("sampled", [False, True])
+def test_snapshot_hit_skips_prefill_ssm(family_models, sampled):
+    """Acceptance: a mamba2 request sharing a 2-block prompt head skips
+    its head's prefill chunks entirely, reports snapshot hits and
+    skipped tokens, and its tokens (greedy AND sampled) are identical
+    to a snapshot-disabled run."""
+    cfg, params = family_models["ssm"]
+    prompts = _shared_prompts(cfg)
+    sampling = (SamplingParams(temperature=0.8, top_k=24, seed=7)
+                if sampled else None)
+    on, a, ca = _run_pair(cfg, params, prompts, sampling=sampling,
+                          prefix_cache=True)
+    off, b, cb = _run_pair(cfg, params, prompts, sampling=sampling,
+                           prefix_cache=False)
+    st = on.stats()["prefix_cache"]
+    assert st["enabled"] and st["snapshot_hits"] == 2
+    assert st["skipped_prefill_tokens"] == 8     # the 2 shared blocks
+    assert st["snapshot_stores"] >= 2 and st["hit_rate"] > 0
+    assert ca == [3, 1] and cb == [3, 3]         # 11->3 chunks vs 10->1
+    assert off.stats()["prefix_cache"]["enabled"] is False
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    # slot-family section surfaces the snapshot pool
+    slots = on.stats()["mixer"]["slots"]
+    assert slots["snapshot_slots"] > 0
+    assert slots["cached_snapshots"] >= 2
+    assert 0 < slots["snapshot_occupancy"] <= 1
+
+
+@pytest.mark.slow
+def test_snapshot_joint_match_hybrid_jamba(jamba_models):
+    """Acceptance: the jamba hybrid reconciles the attn block chain and
+    the slot snapshot depth to one resume position — both families
+    report the SAME skipped tokens and the outputs are identical with
+    snapshots on vs off."""
+    cfg, params = jamba_models
+    prompts = _shared_prompts(cfg, seed=1)
+    on, a, ca = _run_pair(cfg, params, prompts, prefix_cache=True)
+    off, b, _ = _run_pair(cfg, params, prompts, prefix_cache=False)
+    st = on.stats()["prefix_cache"]
+    assert st["snapshot_hits"] == 2 and st["hits"] >= 4  # blocks + snaps
+    assert st["skipped_prefill_tokens"] == 8
+    assert on.cache.attn.skipped_prefill_tokens \
+        == on.cache.ssm.skipped_prefill_tokens == 8
+    assert ca[1] == 1
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+@pytest.mark.slow
+def test_hybrid_attn_adopts_only_to_snapshot_depth(jamba_models):
+    """If the snapshot index only reaches depth 1 while the attn chain
+    covers depth 2, the attn side must adopt ONE block — adopting
+    deeper would resume attention past the recurrent state."""
+    cfg, params = jamba_models
+    prompts = _shared_prompts(cfg, seed=2, tails=(3, 3))
+    eng, outs, _ = _run_pair(cfg, params, [prompts[0]], gen=4,
+                             prefix_cache=True)
+    # drop the deeper snapshot, keep depth 1; block chain keeps depth 2
+    snaps = eng.cache.ssm.snapshots
+    k1, k2 = _keys(prompts[0], 4, 2)
+    assert k2 in snaps
+    row = snaps._map.pop(k2)
+    snaps._free.append(row)
+    assert k1 in snaps and len(eng.cache.attn.prefix) == 2
+    rid = eng.submit(prompts[1], 4)
+    out = eng.run()[rid]
+    req = eng.requests[rid]
+    assert req.skipped_prefill == 4               # depth 1, not 2
+    calm, ref, _ = _run_pair(cfg, params, [prompts[1]], gen=4,
+                             prefix_cache=False)
+    np.testing.assert_array_equal(out, ref[0])
+
+
+# ----------------------------------------------- swap / preempt cycles
+
+
+def _swap_mid_prefill(cfg, params, prompt, **ekw):
+    """Engine with one request swapped out right after its first chunk
+    (pos 4 == one full block: the parked state is a registered
+    snapshot, so swap_out marks it for re-adoption)."""
+    eng = _engine(cfg, params, preempt_policy="swap", **ekw)
+    rid = eng.submit(prompt, 5)
+    eng.step()                                 # admit + first chunk
+    req = eng.requests[rid]
+    assert req.pos == 4 and req.snap_registered == 1
+    eng.scheduler._preempt_one(eng.step_count, None)
+    assert req.state == State.SWAPPED
+    assert req.snap_readopt and req.host_state is None
+    return eng, rid
+
+
+def test_swap_in_readopts_registered_snapshot(family_models):
+    """A request parked AT a registered snapshot skips the host
+    round-trip: swap_in restores from the index by content hash, and
+    the tokens match a pressure-free run."""
+    cfg, params = family_models["ssm"]
+    prompt = _shared_prompts(cfg, seed=3)[0]
+    eng, rid = _swap_mid_prefill(cfg, params, prompt)
+    out = eng.run()
+    sw = eng.stats()["swap"]
+    assert sw["readopted_snapshots"] == 1
+    assert sw["swapped_slots"] == 0            # no D2H trip happened
+    calm = _engine(cfg, params)
+    crid = calm.submit(prompt, 5)
+    np.testing.assert_array_equal(out[rid], calm.run()[crid])
+    eng.cache.ssm.allocator.check()
+
+
+def test_snapshot_lost_falls_back_to_recompute(family_models):
+    """Acceptance: if the parked snapshot was evicted, swap_in reports
+    the loss (swap_lost), the scheduler requeues a recompute, and the
+    final tokens are unchanged."""
+    cfg, params = family_models["ssm"]
+    prompt = _shared_prompts(cfg, seed=4)[0]
+    eng, rid = _swap_mid_prefill(cfg, params, prompt)
+    eng.cache.ssm.snapshots.flush()            # chain gone while parked
+    out = eng.run()
+    trace = eng.scheduler.trace
+    assert any(e["event"] == "swap_lost" and e["rid"] == rid
+               for e in trace)
+    calm = _engine(cfg, params)
+    crid = calm.submit(prompt, 5)
+    np.testing.assert_array_equal(out[rid], calm.run()[crid])
+    eng.cache.ssm.allocator.check()
+
+
+def test_mid_decode_swap_still_takes_host_trip(family_models):
+    """Past the prompt the live state is no registered snapshot — the
+    swap must round-trip the slot through the host exactly as before,
+    and tokens stay identical to a calm run."""
+    cfg, params = family_models["ssm"]
+    prompt = _shared_prompts(cfg, seed=5)[0]
+    eng = _engine(cfg, params, preempt_policy="swap")
+    rid = eng.submit(prompt, 6)
+    for _ in range(6):                         # well into decode
+        eng.step()
+    req = eng.requests[rid]
+    assert req.state == State.DECODE and req.pos > req.prompt_len
+    eng.scheduler._preempt_one(eng.step_count, None)
+    assert req.host_state is not None and not req.snap_readopt
+    out = eng.run()
+    assert eng.stats()["swap"]["swapped_slots"] == 1
+    calm = _engine(cfg, params)
+    crid = calm.submit(prompt, 6)
+    np.testing.assert_array_equal(out[rid], calm.run()[crid])
+
+
+@pytest.mark.parametrize("sampled", [
+    False, pytest.param(True, marks=pytest.mark.slow)])
+def test_snapshot_differential_under_forced_preempt(family_models,
+                                                    sampled):
+    """Acceptance: shared-prefix mamba2 traffic through a forced
+    preempt/swap cycle is token-identical with snapshots on vs off,
+    greedy and sampled."""
+    cfg, params = family_models["ssm"]
+    prompts = _shared_prompts(cfg, seed=6)
+    sampling = (SamplingParams(temperature=0.9, seed=11)
+                if sampled else None)
+
+    def run(prefix):
+        eng = _engine(cfg, params, max_batch=2, preempt_policy="swap",
+                      prefix_cache=prefix)
+        rids = [eng.submit(p, 6, sampling=sampling) for p in prompts]
+        for _ in range(5):                     # both mid-flight
+            eng.step()
+        eng.scheduler._preempt_one(eng.step_count, None)
+        out = eng.run()
+        return eng, [out[r] for r in rids]
+
+    on, a = run(True)
+    off, b = run(False)
+    assert on.stats()["preemptions"] >= 1
+    assert on.stats()["prefix_cache"]["snapshot_stores"] > 0
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_no_snapshot_off_the_chunk_grid(family_models):
+    """A partial final prefill chunk can end block-aligned without
+    being a chunk multiple (prompt 12, chunk 8, block 4 -> chunks end
+    at 8 and 12).  Position 12 must NOT be captured: a consumer
+    resuming there would prefill on a shifted chunk grid, and the SSD
+    dual form's fp association differs across groupings — only
+    chunk-grid depths (8 here) are registered."""
+    cfg, params = family_models["ssm"]
+    rng = np.random.default_rng(8)
+    head = rng.integers(0, cfg.vocab, 12)
+    p1 = head.astype(np.int32)
+    p2 = np.concatenate([head, rng.integers(0, cfg.vocab, 4)]) \
+        .astype(np.int32)
+    eng = _engine(cfg, params, prefill_chunk=8, block_size=4,
+                  max_model_len=32)
+    r1 = eng.submit(p1, 4)
+    eng.run()
+    snaps = eng.cache.ssm.snapshots
+    assert len(snaps) == 1                      # depth 8 only, not 12
+    assert _keys(p1, 4, 2)[1] in snaps
+    r2 = eng.submit(p2, 4)
+    out = eng.run()[r2]
+    assert eng.requests[r2].skipped_prefill == 8
+    calm = _engine(cfg, params, prefill_chunk=8, block_size=4,
+                   max_model_len=32, prefix_cache=False)
+    c2 = calm.submit(p2, 4)
+    np.testing.assert_array_equal(out, calm.run()[c2])
+
+
+def test_swap_out_of_evicted_snapshot_takes_host_trip(family_models):
+    """If the parked state's snapshot was already recycled out of the
+    index, swap_out must NOT mark it for re-adoption — the D2H host
+    copy is far cheaper than the swap_lost full recompute it would
+    otherwise degrade to."""
+    cfg, params = family_models["ssm"]
+    prompt = _shared_prompts(cfg, seed=9)[0]
+    eng = _engine(cfg, params, preempt_policy="swap")
+    rid = eng.submit(prompt, 5)
+    eng.step()                                 # pos 4, depth-1 registered
+    req = eng.requests[rid]
+    assert req.snap_registered == 1
+    eng.cache.ssm.snapshots.flush()            # recycled BEFORE the park
+    eng.scheduler._preempt_one(eng.step_count, None)
+    assert not req.snap_readopt and req.host_state is not None
+    out = eng.run()
+    assert not any(e["event"] == "swap_lost"
+                   for e in eng.scheduler.trace)
+    assert eng.stats()["swap"]["swapped_slots"] == 1
+    calm = _engine(cfg, params)
+    crid = calm.submit(prompt, 5)
+    np.testing.assert_array_equal(out[rid], calm.run()[crid])
+
+
+def test_snapshot_pool_capacity_recycles_lru(family_models):
+    """A single-row snapshot pool keeps only the most recent capture —
+    deeper registrations recycle the row, matching still works on the
+    surviving entry, and outputs are unchanged."""
+    cfg, params = family_models["ssm"]
+    prompts = _shared_prompts(cfg, seed=7)
+    on, a, chunks = _run_pair(cfg, params, prompts, prefix_cache=True,
+                              snapshot_slots=1)
+    st = on.stats()["prefix_cache"]
+    assert st["snapshot_evictions"] >= 1       # depth 1 gave way to 2
+    assert st["skipped_prefill_tokens"] == 8   # deepest entry survived
+    off, b, _ = _run_pair(cfg, params, prompts, prefix_cache=False)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
