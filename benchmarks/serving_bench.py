@@ -22,12 +22,24 @@ family — paged-KV (dense GQA), recurrent slots (mamba2), paged latents
     skipped-prefill credit) — mapped for every family, incl. SSD chunk
     matmuls and MLA latent projections
 
+With --trace DIR each arch's measured window is recorded to
+``DIR/trace_<arch>.jsonl`` (schema: docs/observability.md); with
+--replay-photonic the recorded steps are re-priced through the
+transaction-level photonic simulator and simulated tokens/s + FPS join
+the report.  --bench-json persists everything as a schema-versioned
+``BENCH_serving.json``; --check-json validates such a file (CI gate).
+
 Usage (CPU smoke, reduced configs):
   PYTHONPATH=src python benchmarks/serving_bench.py --smoke --prefix-cache
+  PYTHONPATH=src python benchmarks/serving_bench.py --smoke \
+      --archs bnn-lm-100m --trace /tmp/tr --replay-photonic \
+      --bench-json BENCH_serving.json
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 import jax
@@ -37,7 +49,17 @@ from repro import configs
 from repro.configs.base import reduced
 from repro.models import transformer as M
 from repro.serving import (Engine, EngineConfig, SamplingParams,
-                           layer_layouts, nearest_rank)
+                           layer_layouts, nearest_rank, replay_trace)
+
+BENCH_SCHEMA_VERSION = 1
+
+# BENCH_serving.json contract (CI fails the smoke job on violation)
+BENCH_REQUIRED_KEYS = ("schema_version", "bench", "params", "rows")
+BENCH_REQUIRED_ROW_KEYS = ("arch", "decode_tokens_per_s",
+                           "total_tokens_per_s", "p50_latency_s",
+                           "p99_latency_s", "modeled_tokens_per_s")
+BENCH_REQUIRED_REPLAY_KEYS = ("schema_version", "simulated_tokens_per_s",
+                              "simulated_fps", "analytic_s", "simulated_s")
 
 # one row per mixer family: paged KV, slot (ssm), paged latent (mla),
 # ring buffer (sliding window), hybrid (slots + paged KV per layer)
@@ -68,7 +90,9 @@ def bench_arch(arch: str, *, smoke: bool, n_requests: int, rate_hz: float,
                accelerator: str = "OXBNN_50", prefix_cache: bool = False,
                preempt_policy: str = "swap",
                shared_frac: float = 0.5, spec_k: int = 0,
-               temperature: float = 0.0) -> dict:
+               temperature: float = 0.0,
+               trace_path: str | None = None,
+               replay_photonic: bool = False) -> dict:
     cfg = configs.get_config(arch)
     if smoke:
         cfg = reduced(cfg)
@@ -123,6 +147,11 @@ def bench_arch(arch: str, *, smoke: bool, n_requests: int, rate_hz: float,
     # engine's lifetime token/wall totals feed the modeled-accelerator
     # report, so measure the open-loop window from a clean slate
     eng.reset_stats(flush_prefix=True)
+    # tracing starts AFTER warmup so the trace covers exactly the
+    # measured window (replay then prices only measured steps)
+    if trace_path or replay_photonic:
+        # no file: keep a ring big enough that replay sees every step
+        eng.start_trace(trace_path, ring=1 << 16)
 
     pending = list(range(n_requests))
     submitted: dict[int, float] = {}       # rid -> arrival offset
@@ -140,6 +169,14 @@ def bench_arch(arch: str, *, smoke: bool, n_requests: int, rate_hz: float,
             continue
         eng.step()
     wall = time.perf_counter() - t0
+
+    replay = None
+    if trace_path or replay_photonic:
+        records = eng.tracer.events()
+        eng.stop_trace()
+        if replay_photonic:
+            src = trace_path if trace_path else records
+            replay = replay_trace(src, cfg=cfg, accelerator=accelerator)
 
     lats = sorted((eng.requests[rid].finish_s - t0) - arr
                   for rid, arr in submitted.items()
@@ -177,7 +214,52 @@ def bench_arch(arch: str, *, smoke: bool, n_requests: int, rate_hz: float,
         "modeled_effective_tokens_per_s":
             st["photonic"]["modeled_effective_tokens_per_s"],
         "accelerator": st["photonic"]["accelerator"],
+        "trace_path": trace_path,
+        "replay": replay,
     }
+
+
+def write_bench_json(path: str, rows: list[dict], params: dict):
+    """Persist the run as schema-versioned BENCH_serving.json."""
+    doc = {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "bench": "serving",
+        "generated_by": "benchmarks/serving_bench.py",
+        "params": params,
+        "rows": [{k: v for k, v in r.items()} for r in rows],
+    }
+    with open(path, "w") as fh:
+        json.dump(doc, fh, indent=2, default=float)
+    return doc
+
+
+def check_bench_json(path: str) -> list[str]:
+    """Validate a BENCH_serving.json against the schema contract;
+    returns a list of problems (empty == valid)."""
+    problems = []
+    try:
+        doc = json.load(open(path))
+    except (OSError, ValueError) as e:
+        return [f"{path}: unreadable ({e})"]
+    for k in BENCH_REQUIRED_KEYS:
+        if k not in doc:
+            problems.append(f"missing top-level key {k!r}")
+    if doc.get("schema_version") != BENCH_SCHEMA_VERSION:
+        problems.append(f"schema_version {doc.get('schema_version')!r} != "
+                        f"{BENCH_SCHEMA_VERSION}")
+    rows = doc.get("rows") or []
+    if not rows:
+        problems.append("no rows")
+    for i, row in enumerate(rows):
+        for k in BENCH_REQUIRED_ROW_KEYS:
+            if k not in row:
+                problems.append(f"row {i} ({row.get('arch')}): missing {k!r}")
+        rep = row.get("replay")
+        if rep is not None:
+            for k in BENCH_REQUIRED_REPLAY_KEYS:
+                if k not in rep:
+                    problems.append(f"row {i} replay: missing {k!r}")
+    return problems
 
 
 def main():
@@ -209,7 +291,29 @@ def main():
                     help="exit non-zero unless every SSM/hybrid row "
                          "reports snapshot hits and skipped prefill "
                          "tokens (CI smoke assertion)")
+    ap.add_argument("--trace", default=None, metavar="DIR",
+                    help="record each arch's measured window to "
+                         "DIR/trace_<arch>.jsonl")
+    ap.add_argument("--replay-photonic", action="store_true",
+                    help="re-price recorded steps through the photonic "
+                         "simulator; adds simulated tok/s + FPS")
+    ap.add_argument("--bench-json", default=None, metavar="PATH",
+                    help="persist results as schema-versioned JSON")
+    ap.add_argument("--check-json", default=None, metavar="PATH",
+                    help="validate an existing bench JSON and exit "
+                         "(CI schema gate; no benchmark is run)")
     args = ap.parse_args()
+
+    if args.check_json:
+        problems = check_bench_json(args.check_json)
+        if problems:
+            raise SystemExit("bench JSON schema violations:\n  "
+                             + "\n  ".join(problems))
+        print(f"[bench] {args.check_json}: schema v{BENCH_SCHEMA_VERSION} OK")
+        return
+
+    if args.trace:
+        os.makedirs(args.trace, exist_ok=True)
 
     archs = args.archs.split(",") if args.archs else SMOKE_ARCHS
     n = args.requests or (6 if args.smoke else 32)
@@ -227,7 +331,11 @@ def main():
           f"{'swap(ms)':>9} "
           f"{'modeled tok/s':>14} {'eff tok/s':>12} {'spec-x':>7}")
     failures = []
+    rows = []
     for arch in archs:
+        tpath = (os.path.join(args.trace,
+                              f"trace_{arch.replace('/', '_')}.jsonl")
+                 if args.trace else None)
         r = bench_arch(arch, smoke=args.smoke, n_requests=n, rate_hz=rate,
                        prompt_len=plen, gen=gen, max_batch=args.max_batch,
                        precision=args.precision,
@@ -235,7 +343,10 @@ def main():
                        prefix_cache=args.prefix_cache,
                        preempt_policy=args.preempt_policy,
                        shared_frac=args.shared_frac,
-                       spec_k=args.spec_k, temperature=args.temperature)
+                       spec_k=args.spec_k, temperature=args.temperature,
+                       trace_path=tpath,
+                       replay_photonic=args.replay_photonic)
+        rows.append(r)
         print(f"{r['arch']:<22} {r['decode_tokens_per_s']:>9.1f} "
               f"{r['total_tokens_per_s']:>9.1f} "
               f"{r['p50_latency_s']:>8.3f} {r['p99_latency_s']:>8.3f} "
@@ -256,6 +367,24 @@ def main():
                     r["snapshot_hits"] == 0
                     or r["skipped_prefill_tokens"] == 0):
             failures.append(arch)
+    if args.replay_photonic:
+        from repro.serving import format_report
+        for r in rows:
+            if r["replay"] is not None:
+                print(format_report(r["replay"]))
+    if args.bench_json:
+        params = {"smoke": args.smoke, "requests": n, "rate_hz": rate,
+                  "prompt_len": plen, "gen": gen,
+                  "max_batch": args.max_batch,
+                  "precision": args.precision,
+                  "accelerator": args.accelerator,
+                  "prefix_cache": bool(args.prefix_cache),
+                  "shared_frac": args.shared_frac, "spec_k": args.spec_k,
+                  "temperature": args.temperature,
+                  "replay_photonic": args.replay_photonic}
+        write_bench_json(args.bench_json, rows, params)
+        print(f"[bench] wrote {args.bench_json} "
+              f"(schema v{BENCH_SCHEMA_VERSION}, {len(rows)} rows)")
     if failures:
         raise SystemExit(
             f"--require-snapshot-hits: no snapshot reuse on {failures} "

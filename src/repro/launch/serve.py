@@ -104,7 +104,9 @@ def serve(arch: str, *, smoke: bool = False, multi_pod: bool = False,
           snapshot_slots: int = 0,
           temperature: float = 0.0, top_k: int = 0, top_p: float = 1.0,
           sampling_seed: int = 0, stop: tuple[int, ...] = (),
-          spec_k: int = 0, spec_ngram: int = 3):
+          spec_k: int = 0, spec_ngram: int = 3,
+          trace: str | None = None, replay_photonic: bool = False,
+          capture_logits: bool = False):
     """Serve ``batch`` synthetic requests; returns (batch, prompt+gen)
     token ids (prompt prefix included, matching the legacy loop).  With
     stop tokens the generations can end early — the result is then a
@@ -129,6 +131,9 @@ def serve(arch: str, *, smoke: bool = False, multi_pod: bool = False,
             snapshot_slots=snapshot_slots,
             spec_k=spec_k, spec_ngram=spec_ngram)
         eng = Engine(params, cfg, ecfg)
+        if trace or replay_photonic:
+            eng.start_trace(trace, ring=1 << 16,
+                            capture_logits=capture_logits)
         prompts = np.asarray(_prompts(cfg, batch, prompt_len, seed))
         # temperature speaks for itself (0 == greedy); the ``greedy``
         # flag only selects the legacy loop's sampling mode above
@@ -140,6 +145,17 @@ def serve(arch: str, *, smoke: bool = False, multi_pod: bool = False,
                 for b in range(batch)]
         out = eng.run()
         stats = eng.stats()
+        if trace or replay_photonic:
+            records = eng.tracer.events()
+            eng.stop_trace()
+            if trace and verbose:
+                print(f"[serve] trace -> {trace} "
+                      f"(view: python -m repro.launch.trace_view {trace})")
+            if replay_photonic:
+                from repro.serving import format_report, replay_trace
+                rep = replay_trace(trace if trace else records, cfg=cfg,
+                                   accelerator=accelerator)
+                print(format_report(rep))
         if verbose:
             ph, pc, sw = (stats["photonic"], stats["prefix_cache"],
                           stats["swap"])
@@ -225,6 +241,12 @@ def main():
                     help="speculative draft length (0 = off)")
     ap.add_argument("--spec-ngram", type=int, default=3,
                     help="max n-gram for prompt-lookup drafting")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record a structured JSONL engine trace "
+                         "(view with python -m repro.launch.trace_view)")
+    ap.add_argument("--replay-photonic", action="store_true",
+                    help="replay the recorded steps through the "
+                         "photonic simulator (analytic-vs-simulated)")
     args = ap.parse_args()
     serve(args.arch, smoke=args.smoke, multi_pod=args.multi_pod,
           batch=args.batch, prompt_len=args.prompt_len, gen=args.gen,
@@ -237,7 +259,8 @@ def main():
           temperature=args.temperature,
           top_k=args.top_k, top_p=args.top_p,
           sampling_seed=args.sampling_seed, stop=tuple(args.stop_token),
-          spec_k=args.spec_k, spec_ngram=args.spec_ngram)
+          spec_k=args.spec_k, spec_ngram=args.spec_ngram,
+          trace=args.trace, replay_photonic=args.replay_photonic)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,180 @@
+"""Trace viewer: export engine JSONL traces to the Chrome/Perfetto
+``trace_event`` format, and run the hardware-in-the-loop replay report.
+
+Tracks (load the output at https://ui.perfetto.dev or chrome://tracing):
+
+  * ``engine / steps``    — one slice per engine step, named by its
+                            kind (prefill / decode / spec_verify /
+                            combinations / idle), args carrying the
+                            step record (rows, bucket, fed/committed
+                            tokens, drafted/accepted, actions);
+  * ``engine / copies``   — host-side swap/snapshot copy spans
+                            (swap_out / swap_in / snapshot_out /
+                            snapshot_in) with block counts;
+  * ``requests / rid N``  — per-request lifecycle: a ``queued`` slice
+                            from submit to admit, ``running`` from
+                            admit to finish (or swap_out), ``swapped``
+                            while parked on the host, plus instants for
+                            defer (with reason), swap_lost, evict, and
+                            first_token.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.trace_view trace.jsonl \
+      --out trace.perfetto.json --replay-photonic
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.serving.replay import format_report, replay_trace
+from repro.serving.tracing import read_trace
+
+ENGINE_PID = 1
+REQUEST_PID = 2
+STEP_TID = 1
+COPY_TID = 2
+
+_US = 1e6  # trace_event timestamps are microseconds
+
+
+def _meta_event(pid, tid, name, value):
+    return {"ph": "M", "pid": pid, "tid": tid, "name": name,
+            "args": {"name": value}}
+
+
+def _slice(pid, tid, name, ts_s, dur_s, args=None):
+    ev = {"ph": "X", "pid": pid, "tid": tid, "name": name,
+          "ts": ts_s * _US, "dur": max(dur_s, 0.0) * _US}
+    if args:
+        ev["args"] = args
+    return ev
+
+
+def _instant(pid, tid, name, ts_s, args=None):
+    ev = {"ph": "i", "s": "t", "pid": pid, "tid": tid, "name": name,
+          "ts": ts_s * _US}
+    if args:
+        ev["args"] = args
+    return ev
+
+
+def to_trace_events(records: list[dict]) -> dict:
+    """Convert a validated trace record list to a Chrome trace_event
+    JSON object (``{"traceEvents": [...]}``)."""
+    meta = records[0]
+    events = [
+        _meta_event(ENGINE_PID, 0, "process_name", "engine"),
+        _meta_event(ENGINE_PID, STEP_TID, "thread_name", "steps"),
+        _meta_event(ENGINE_PID, COPY_TID, "thread_name", "copies"),
+        _meta_event(REQUEST_PID, 0, "process_name", "requests"),
+    ]
+    last_ts = 0.0
+    # engine steps + copy spans -------------------------------------
+    for rec in records:
+        t = rec["type"]
+        if t == "step":
+            # a step's ts is stamped at emit (step end): start = ts - dur
+            args = {k: v for k, v in rec.items()
+                    if k not in ("type", "ts", "dur_s", "kind")}
+            events.append(_slice(ENGINE_PID, STEP_TID, rec["kind"],
+                                 rec["ts"] - rec["dur_s"], rec["dur_s"],
+                                 args))
+            last_ts = max(last_ts, rec["ts"])
+        elif t == "span":
+            # span ts is the scope's START
+            args = {k: v for k, v in rec.items()
+                    if k not in ("type", "ts", "dur_s", "name")}
+            events.append(_slice(ENGINE_PID, COPY_TID, rec["name"],
+                                 rec["ts"], rec["dur_s"], args))
+            last_ts = max(last_ts, rec["ts"] + rec["dur_s"])
+    # per-request lifecycle tracks ----------------------------------
+    by_rid: dict[int, list[dict]] = {}
+    for rec in records:
+        if rec["type"] == "request":
+            by_rid.setdefault(rec["rid"], []).append(rec)
+            last_ts = max(last_ts, rec.get("ts", 0.0))
+    for rid in sorted(by_rid):
+        tid = rid + 1  # tid 0 is reserved for process metadata
+        events.append(_meta_event(REQUEST_PID, tid, "thread_name",
+                                  f"rid {rid}"))
+        open_since: dict[str, float] = {}  # phase name -> start ts
+
+        def _close(phase, end_ts, args=None):
+            t0 = open_since.pop(phase, None)
+            if t0 is not None:
+                events.append(_slice(REQUEST_PID, tid, phase, t0,
+                                     end_ts - t0, args))
+
+        for rec in by_rid[rid]:
+            ev, ts = rec["event"], rec.get("ts", 0.0)
+            args = {k: v for k, v in rec.items()
+                    if k not in ("type", "ts", "event", "rid")}
+            if ev == "submit":
+                open_since["queued"] = ts
+            elif ev in ("admit", "swap_in"):
+                _close("queued", ts, args)
+                _close("swapped", ts, args)
+                open_since["running"] = ts
+            elif ev == "swap_out":
+                _close("running", ts, args)
+                open_since["swapped"] = ts
+            elif ev == "evict":
+                _close("running", ts, args)
+                open_since["queued"] = ts
+            elif ev == "swap_lost":
+                _close("swapped", ts, args)
+                open_since["queued"] = ts
+                events.append(_instant(REQUEST_PID, tid, "swap_lost",
+                                       ts, args))
+            elif ev == "finish":
+                _close("running", ts, args)
+            else:  # defer / first_token / prefill / custom
+                events.append(_instant(REQUEST_PID, tid, ev, ts, args))
+        # phases still open when the trace ends (interrupted run)
+        for phase in list(open_since):
+            _close(phase, last_ts, {"truncated": True})
+    return {
+        "traceEvents": events,
+        "otherData": {k: v for k, v in meta.items()
+                      if k in ("schema", "arch", "accelerator", "spec_k")},
+    }
+
+
+def export_perfetto(source, out_path: str) -> int:
+    """Write a Chrome/Perfetto trace JSON; returns the event count."""
+    records = read_trace(source) if isinstance(source, str) else list(source)
+    doc = to_trace_events(records)
+    with open(out_path, "w") as fh:
+        json.dump(doc, fh)
+    return len(doc["traceEvents"])
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="export engine traces to Perfetto; replay them "
+                    "through the photonic simulator")
+    ap.add_argument("trace", help="JSONL trace from Engine.start_trace / "
+                                  "serving_bench --trace")
+    ap.add_argument("--out", default=None,
+                    help="Perfetto trace_event JSON output path "
+                         "(default: <trace>.perfetto.json)")
+    ap.add_argument("--replay-photonic", action="store_true",
+                    help="re-price the recorded steps on the photonic "
+                         "simulator and print analytic-vs-simulated")
+    ap.add_argument("--accelerator", default=None,
+                    help="override the accelerator recorded in the trace")
+    ap.add_argument("--json", action="store_true",
+                    help="print the replay report as JSON")
+    args = ap.parse_args(argv)
+
+    out = args.out or (args.trace.rsplit(".jsonl", 1)[0] + ".perfetto.json")
+    n = export_perfetto(args.trace, out)
+    print(f"[trace_view] wrote {n} events -> {out}")
+    if args.replay_photonic:
+        rep = replay_trace(args.trace, accelerator=args.accelerator)
+        print(json.dumps(rep, indent=2) if args.json else format_report(rep))
+
+
+if __name__ == "__main__":
+    main()

@@ -12,6 +12,7 @@ S = 4608 (= 3*3*512) appears in VGG-small/ResNet18 as expected
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 
 
@@ -26,6 +27,16 @@ class LayerSpec:
     w_in: int
     groups: int = 1
     pad: int | None = None  # default: 'same'-ish k//2
+    # rows streamed through the SAME weight-stationary layer back to
+    # back (serving replay: a decode batch of B requests).  Extra rows
+    # add VDP outputs — more waves over the XPE pool, sharing the
+    # layer's pipeline fill and its programmed MRR weight banks — so
+    # batching has a modeled hardware cost curve instead of B× the
+    # batch-1 latency.  Weight volume (and TUNE work) does not scale.
+    batch: int = 1
+
+    def with_batch(self, n: int) -> "LayerSpec":
+        return dataclasses.replace(self, batch=max(int(n), 1))
 
     @property
     def h_out(self) -> int:
@@ -44,12 +55,12 @@ class LayerSpec:
 
     @property
     def v(self) -> int:
-        """Number of vector-dot-products (outputs)."""
-        return self.c_out * self.h_out * self.w_out
+        """Number of vector-dot-products (outputs, x batch rows)."""
+        return self.batch * self.c_out * self.h_out * self.w_out
 
     @property
     def input_bits(self) -> int:
-        return self.c_in * self.h_in * self.w_in
+        return self.batch * self.c_in * self.h_in * self.w_in
 
     @property
     def weight_bits(self) -> int:

@@ -56,7 +56,6 @@ composite over the block-family state and the recurrent-slot state
 from __future__ import annotations
 
 import functools
-import time
 from collections import OrderedDict
 
 import jax
@@ -68,6 +67,7 @@ from repro.models.transformer import layer_plan
 from repro.serving.mixer_state import (                             # noqa: F401
     LAYOUT_SLOT, MixerState, RecurrentSlotState, chunk_key,
     layer_layouts, ring_block_count)
+from repro.serving.tracing import Tracer
 
 
 # Pool updates outside the engine's step functions follow the same
@@ -260,8 +260,12 @@ class BlockKVCache(MixerState):
                  max_model_len: int, dtype=np.float32,
                  prefix_cache: bool = True,
                  layer_ids: list[int] | None = None,
-                 ring_blocks: int = 0):
+                 ring_blocks: int = 0, tracer: Tracer | None = None):
         self.cfg = cfg
+        # wall-time accounting goes through the tracer's span API (the
+        # engine shares its tracer; standalone instances get a private
+        # disabled one) — one source of truth for swap timings
+        self.tracer = tracer if tracer is not None else Tracer()
         self.block_size = block_size
         self.num_blocks = num_blocks
         self.ring_blocks = ring_blocks
@@ -291,8 +295,6 @@ class BlockKVCache(MixerState):
         self.swap_ins = 0
         self.swapped_blocks = 0          # blocks that took the host trip
         self.readopted_blocks = 0        # blocks re-adopted from the index
-        self.swap_out_s = 0.0
-        self.swap_in_s = 0.0
         # occupancy / ring counters
         self.blocks_allocated = 0
         self.ring_reuses = 0             # trailing blocks recycled in place
@@ -318,7 +320,7 @@ class BlockKVCache(MixerState):
         self.skipped_prefill_tokens = self.cow_copies = 0
         self.swap_outs = self.swap_ins = self.swapped_blocks = 0
         self.readopted_blocks = 0
-        self.swap_out_s = self.swap_in_s = 0.0
+        self.tracer.reset_spans("swap_out", "swap_in")
         self.blocks_allocated = self.ring_reuses = 0
         self.peak_used = self.allocator.num_used
 
@@ -487,26 +489,26 @@ class BlockKVCache(MixerState):
         and ``swap_in`` re-adopts them by content hash.  The remaining
         blocks go to host buffers; either way req drops every device
         reference."""
-        t0 = time.perf_counter()
-        readopt = 0
-        if self.prefix is not None and req.n_registered and \
-                self.blocks_for(req.pos) <= (self.ring_blocks
-                                             or self.max_blocks_per_seq):
-            # ring wrap invalidates the leading-block <-> chain-key
-            # correspondence, so re-adoption only applies pre-wrap
-            readopt = req.n_registered
-        ids = np.asarray(req.blocks[readopt:], np.int32)
-        host = []
-        for pool in self.pools:
-            host.append({k: np.ascontiguousarray(jax.device_get(v[ids]))
-                         for k, v in pool.items()})
-        req.host_kv = host
-        req.swap_readopt = readopt
-        self.allocator.free(req.blocks)
-        req.blocks = []
-        self.swap_outs += 1
-        self.swapped_blocks += len(ids)
-        self.swap_out_s += time.perf_counter() - t0
+        with self.tracer.span("swap_out", rid=req.rid) as sp:
+            readopt = 0
+            if self.prefix is not None and req.n_registered and \
+                    self.blocks_for(req.pos) <= (self.ring_blocks
+                                                 or self.max_blocks_per_seq):
+                # ring wrap invalidates the leading-block <-> chain-key
+                # correspondence, so re-adoption only applies pre-wrap
+                readopt = req.n_registered
+            ids = np.asarray(req.blocks[readopt:], np.int32)
+            host = []
+            for pool in self.pools:
+                host.append({k: np.ascontiguousarray(jax.device_get(v[ids]))
+                             for k, v in pool.items()})
+            req.host_kv = host
+            req.swap_readopt = readopt
+            self.allocator.free(req.blocks)
+            req.blocks = []
+            self.swap_outs += 1
+            self.swapped_blocks += len(ids)
+            sp.extra["blocks"] = len(ids)
 
     def swap_in(self, req) -> bool | None:
         """Restore a swapped request.  Registered blocks are re-adopted
@@ -533,21 +535,21 @@ class BlockKVCache(MixerState):
             for a in adopted:
                 self.allocator.decref(a)
             return False
-        t0 = time.perf_counter()
-        for li, h in enumerate(req.host_kv):
-            pool = self.pools[li]
-            for j, b in enumerate(got):
-                pool = _host_restore(pool, jnp.int32(b),
-                                     {k: v[j] for k, v in h.items()})
-            self.pools[li] = pool
-        # async dispatch: sync so the timer covers the actual copies
-        jax.block_until_ready([next(iter(p.values())) for p in self.pools])
+        with self.tracer.span("swap_in", rid=req.rid, blocks=n):
+            for li, h in enumerate(req.host_kv):
+                pool = self.pools[li]
+                for j, b in enumerate(got):
+                    pool = _host_restore(pool, jnp.int32(b),
+                                         {k: v[j] for k, v in h.items()})
+                self.pools[li] = pool
+            # async dispatch: sync so the span covers the actual copies
+            jax.block_until_ready([next(iter(p.values()))
+                                   for p in self.pools])
         req.blocks = adopted + got
         req.host_kv = None
         req.swap_readopt = 0
         self.swap_ins += 1
         self.readopted_blocks += len(adopted)
-        self.swap_in_s += time.perf_counter() - t0
         return True
 
     # ----------------------------------------------------- block table
@@ -593,8 +595,10 @@ class MixerStateCache:
     def __init__(self, cfg, *, num_blocks: int, block_size: int,
                  max_model_len: int, dtype=np.float32,
                  prefix_cache: bool = True, num_slots: int = 8,
-                 prefill_chunk: int = 16, snapshot_slots: int = 16):
+                 prefill_chunk: int = 16, snapshot_slots: int = 16,
+                 tracer: Tracer | None = None):
         self.cfg = cfg
+        self.tracer = tracer if tracer is not None else Tracer()
         self.block_size = block_size
         self.layouts = layer_layouts(cfg)
         attn_ids = [i for i, l in enumerate(self.layouts)
@@ -608,7 +612,8 @@ class MixerStateCache:
             cfg, num_blocks=num_blocks, block_size=block_size,
             max_model_len=max_model_len, dtype=dtype,
             prefix_cache=bool(prefix_cache),
-            layer_ids=attn_ids, ring_blocks=self.ring_blocks) \
+            layer_ids=attn_ids, ring_blocks=self.ring_blocks,
+            tracer=self.tracer) \
             if attn_ids else None
         # recurrent state cannot be adopted by aliasing storage, but it
         # CAN be restored: slot layers run the content-addressed
@@ -617,7 +622,7 @@ class MixerStateCache:
         self.ssm = RecurrentSlotState(
             cfg, slot_ids, num_slots, dtype, block_size=block_size,
             snapshot_slots=snapshot_slots if prefix_cache else 0,
-            prefill_chunk=prefill_chunk) \
+            prefill_chunk=prefill_chunk, tracer=self.tracer) \
             if slot_ids else None
         self.swap_outs = 0          # request-level (hybrids swap both
         self.swap_ins = 0           # families in one event)
@@ -814,6 +819,7 @@ class MixerStateCache:
 
     def swap_section(self) -> dict:
         a, s = self.attn, self.ssm
+        tr = self.tracer
         return {
             "swap_outs": self.swap_outs,
             "swap_ins": self.swap_ins,
@@ -821,10 +827,12 @@ class MixerStateCache:
             "readopted_blocks": a.readopted_blocks if a else 0,
             "swapped_slots": s.swapped_slots if s else 0,
             "readopted_snapshots": s.readopted_snapshots if s else 0,
-            "swap_out_s": (a.swap_out_s if a else 0.0)
-                          + (s.snapshot_out_s if s else 0.0),
-            "swap_in_s": (a.swap_in_s if a else 0.0)
-                         + (s.snapshot_in_s if s else 0.0),
+            # span accumulators — equals the sum of the emitted span
+            # records (tests/test_tracing.py asserts this)
+            "swap_out_s": (tr.span_total("swap_out")
+                           + tr.span_total("snapshot_out")),
+            "swap_in_s": (tr.span_total("swap_in")
+                          + tr.span_total("snapshot_in")),
         }
 
     def mixer_section(self) -> dict:

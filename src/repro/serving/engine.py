@@ -40,7 +40,7 @@ from __future__ import annotations
 
 import math
 import time
-from dataclasses import dataclass
+from dataclasses import asdict, dataclass
 
 import jax
 import jax.numpy as jnp
@@ -53,6 +53,7 @@ from repro.serving.request import Request, State
 from repro.serving.sampling import (SamplingParams, prompt_lookup_draft,
                                     sample_tokens, sampling_rows)
 from repro.serving.scheduler import Scheduler, SchedulerConfig
+from repro.serving.tracing import Tracer
 
 
 def nearest_rank(sorted_vals, p: float) -> float:
@@ -93,6 +94,10 @@ class Engine:
         self.params = params
         self.cfg = cfg
         self.ecfg = ecfg
+        # one tracer threaded through scheduler + caches: disabled by
+        # default (near-zero cost), start_trace() turns recording on.
+        # Its span accumulators back the wall-time stats either way.
+        self.tracer = Tracer()
         self.cache = MixerStateCache(
             cfg, num_blocks=ecfg.num_blocks,
             block_size=ecfg.block_size,
@@ -100,7 +105,8 @@ class Engine:
             prefix_cache=ecfg.prefix_cache,
             num_slots=ecfg.num_slots or ecfg.max_batch + 1,
             prefill_chunk=ecfg.prefill_chunk,
-            snapshot_slots=ecfg.snapshot_slots or 2 * ecfg.max_batch)
+            snapshot_slots=ecfg.snapshot_slots or 2 * ecfg.max_batch,
+            tracer=self.tracer)
         # ring rollback safety: stale speculative writes must only ever
         # clobber positions already outside the attention window, which
         # the prefill-sized ring guarantees when the verify chunk is no
@@ -115,12 +121,12 @@ class Engine:
                             policy=ecfg.policy,
                             preempt_policy=ecfg.preempt_policy,
                             decode_cost=1 + self._spec_k),
-            self.cache)
+            self.cache, tracer=self.tracer)
         self.cost_model = PhotonicCostModel(cfg, ecfg.accelerator)
         self.requests: dict[int, Request] = {}
         self.step_count = 0
         self._next_rid = 0
-        self._wall_s = 0.0
+        self._step_rec: dict | None = None   # per-step trace assembly
         self._decoded = 0
         self._prefilled = 0
         self._prefill_calls = 0          # chunked-prefill passes (cost model)
@@ -211,6 +217,24 @@ class Engine:
 
     # ---------------------------------------------------------------- API
 
+    def start_trace(self, path: str | None = None, *, ring: int = 4096,
+                    capture_logits: bool = False) -> Tracer:
+        """Turn structured tracing on: every step/request/span event
+        goes to a bounded in-memory ring and (when ``path`` is given)
+        streams to JSONL.  The leading meta record makes the trace
+        self-describing — the replay driver and the Perfetto exporter
+        need nothing else (see serving/tracing.py)."""
+        self.tracer.open(path, ring=ring, capture_logits=capture_logits)
+        self.tracer.meta(
+            arch=self.cfg.name, accelerator=self.ecfg.accelerator,
+            config=asdict(self.cfg), engine=asdict(self.ecfg),
+            spec_k=self._spec_k)
+        return self.tracer
+
+    def stop_trace(self):
+        """Flush + close the trace stream (ring stays readable)."""
+        self.tracer.close()
+
     def submit(self, prompt, max_new: int, *, priority: int = 0,
                arrival_s: float = 0.0,
                sampling: SamplingParams | None = None) -> int:
@@ -233,10 +257,24 @@ class Engine:
         self.scheduler.submit(req, self.step_count)
         return rid
 
+    def _counter_marks(self) -> tuple:
+        """Cheap cache/scheduler counter snapshot — the step record
+        reports per-step deltas (prefix/snapshot hits, preempt/swap
+        actions).  Built only while tracing is enabled."""
+        c, s = self.cache, self.scheduler
+        a, m = c.attn, c.ssm
+        return (a.prefix_hits if a is not None else 0,
+                m.snap_hits if m is not None else 0,
+                s.preempts, s.swap_losts, c.swap_outs, c.swap_ins)
+
     def step(self) -> bool:
         """One engine iteration; False when nothing was schedulable."""
         t0 = time.perf_counter()
         step = self.step_count
+        tr = self.tracer
+        if tr.enabled:
+            self._step_rec = {}
+            marks = self._counter_marks()
         plan = self.scheduler.schedule(step)
         if plan.prefill is not None:
             self._run_prefill(step, plan.prefill, plan.prefill_tokens)
@@ -249,7 +287,23 @@ class Engine:
             else:
                 self._run_decode(step, decode)
         self.step_count += 1
-        self._wall_s += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        tr.add_time("step", dt)
+        if tr.enabled:
+            rec = self._step_rec
+            self._step_rec = None
+            delta = [b - a for a, b in zip(marks, self._counter_marks())]
+            keys = ("prefix_hits", "snapshot_hits", "preempts",
+                    "swap_losts", "swap_outs", "swap_ins")
+            actions = {k: d for k, d in zip(keys, delta) if d}
+            ev = {"type": "step", "step": step, "dur_s": dt,
+                  "kind": "+".join(
+                      k for k in ("prefill", "decode", "spec_verify")
+                      if k in rec) or "idle"}
+            ev.update(rec)
+            if actions:
+                ev["actions"] = actions
+            tr.emit(ev)
         return plan.has_work
 
     def run(self) -> dict[int, np.ndarray]:
@@ -295,6 +349,13 @@ class Engine:
         self.cache.register_prefix(req)
         self.scheduler._ev(step, "prefill", req.rid, tokens=chunk,
                            pos=req.pos)
+        if self._step_rec is not None:
+            info = {"rid": req.rid, "tokens": chunk, "pos": req.pos,
+                    "prompt_len": req.prompt_len}
+            if self.tracer.capture_logits:
+                info["logits"] = np.asarray(
+                    _logits[0, :chunk], np.float32).tolist()
+            self._step_rec["prefill"] = info
         if req.pos == req.prompt_len:
             req.out.append(int(np.asarray(tok)[0]))
             req.state = State.DECODE
@@ -350,7 +411,7 @@ class Engine:
         table = self.cache.table_rows(ready, bucket)
         slots = self.cache.slot_rows(ready, bucket)
         srows = sampling_rows(ready, bucket)
-        next_tok, _, pools = self._decode_fn(
+        next_tok, _dec_logits, pools = self._decode_fn(
             self.params, self.cache.pools, jnp.asarray(tokens),
             jnp.asarray(table), jnp.asarray(lengths), jnp.asarray(active),
             jnp.asarray(slots), *srows.as_args())
@@ -362,6 +423,14 @@ class Engine:
         self._decode_produced += len(ready)
         self.scheduler._ev(step, "decode", None,
                            rids=[r.rid for r in ready], batch=bucket)
+        if self._step_rec is not None:
+            info = {"rows": len(ready), "bucket": bucket,
+                    "rids": [r.rid for r in ready],
+                    "fed_tokens": len(ready), "committed": len(ready)}
+            if self.tracer.capture_logits:
+                info["logits"] = np.asarray(
+                    _dec_logits[:len(ready), -1], np.float32).tolist()
+            self._step_rec["decode"] = info
         now = time.perf_counter()
         for i, r in enumerate(ready):
             r.pos += 1
@@ -467,6 +536,17 @@ class Engine:
                            drafted=int(n_valid[:len(ready)].sum())
                            - len(ready),
                            committed=committed_total)
+        if self._step_rec is not None:
+            self._step_rec["spec_verify"] = {
+                "rows": len(ready), "bucket": bucket,
+                "rids": [r.rid for r in ready],
+                "fed": n_valid[:len(ready)].tolist(),
+                "fed_tokens": int(n_valid[:len(ready)].sum()),
+                "drafted": int(n_valid[:len(ready)].sum()) - len(ready),
+                "accepted": int(np.minimum(
+                    n_commit[:len(ready)] - 1,
+                    n_valid[:len(ready)] - 1).clip(0).sum()),
+                "committed": committed_total}
 
     # -------------------------------------------------------------- stats
 
@@ -474,7 +554,7 @@ class Engine:
         """Zero the token/wall/cache counters without touching request
         or scheduler state — benches call this after jit warmup so the
         measured window starts from a clean slate."""
-        self._wall_s = 0.0
+        self.tracer.reset_spans("step")
         self._decoded = self._prefilled = self._prefill_calls = 0
         self._max_concurrent = 0
         self._decode_calls = self._decode_rows = self._decode_produced = 0
@@ -491,21 +571,25 @@ class Engine:
                      if r.finish_s is not None and r.submit_s is not None)
         c = self.cache
         prefix = c.prefix_section()
+        # the span accumulator (serving/tracing.py) is the single
+        # source of wall-time truth: the same number the emitted step
+        # records sum to (asserted in tests/test_tracing.py)
+        wall_s = self.tracer.span_total("step")
         return {
             "steps": self.step_count,
             "finished": len(finished),
             "decoded_tokens": self._decoded,
             "prefill_tokens": self._prefilled,
-            "wall_s": self._wall_s,
+            "wall_s": wall_s,
             # decode-only rate AND the all-computed-tokens rate: the
             # wall clock covers prefill too, so dividing decoded tokens
             # alone by it under-reports the engine (the old mislabeled
             # "tokens_per_s")
-            "decode_tokens_per_s": (self._decoded / self._wall_s
-                                    if self._wall_s else float("nan")),
+            "decode_tokens_per_s": (self._decoded / wall_s
+                                    if wall_s else float("nan")),
             "total_tokens_per_s": (
-                (self._decoded + self._prefilled) / self._wall_s
-                if self._wall_s else float("nan")),
+                (self._decoded + self._prefilled) / wall_s
+                if wall_s else float("nan")),
             "p50_latency_s": nearest_rank(lat, 50),
             "p99_latency_s": nearest_rank(lat, 99),
             "max_concurrent_decode": self._max_concurrent,

@@ -44,7 +44,6 @@ from __future__ import annotations
 import abc
 import functools
 import hashlib
-import time
 from collections import OrderedDict
 
 import jax
@@ -53,6 +52,7 @@ import numpy as np
 
 from repro.layers import mamba2
 from repro.models.transformer import layer_plan
+from repro.serving.tracing import Tracer
 
 LAYOUT_PAGED = "paged"     # unbounded block table (full attention)
 LAYOUT_RING = "ring"       # window-sized circular block table
@@ -245,12 +245,16 @@ class RecurrentSlotState(MixerState):
 
     def __init__(self, cfg, layer_ids: list[int], num_slots: int,
                  dtype=np.float32, *, block_size: int = 0,
-                 snapshot_slots: int = 0, prefill_chunk: int = 0):
+                 snapshot_slots: int = 0, prefill_chunk: int = 0,
+                 tracer: Tracer | None = None):
         # BlockAllocator gives the same reserved-id-0 free-list +
         # invariant checking a slot pool needs (slots are just blocks
         # that are never shared)
         from repro.serving.block_cache import BlockAllocator
         self.cfg = cfg
+        # snapshot copy timings go through the tracer span API (shared
+        # with the engine; standalone instances get a disabled one)
+        self.tracer = tracer if tracer is not None else Tracer()
         self.layer_ids = list(layer_ids)
         self.num_slots = num_slots
         self.block_size = block_size
@@ -263,8 +267,6 @@ class RecurrentSlotState(MixerState):
                               dtype)
             if snapshot_slots > 0 and block_size > 0 else None)
         self.peak_used = 0
-        self.snapshot_out_s = 0.0
-        self.snapshot_in_s = 0.0
         self.swapped_slots = 0
         # snapshot-index counters (engine.stats surfaces these)
         self.snap_queries = 0            # full prompt blocks walked
@@ -274,7 +276,7 @@ class RecurrentSlotState(MixerState):
 
     def reset_stats(self, *, flush_snapshots: bool = False):
         self.peak_used = 0
-        self.snapshot_out_s = self.snapshot_in_s = 0.0
+        self.tracer.reset_spans("snapshot_out", "snapshot_in")
         self.swapped_slots = 0
         self.snap_queries = self.snap_hits = 0
         self.skipped_prefill_tokens = self.readopted_snapshots = 0
@@ -417,28 +419,27 @@ class RecurrentSlotState(MixerState):
             req.slot = None
 
     def swap_out(self, req):
-        t0 = time.perf_counter()
-        bs = self.block_size
-        if (self.snapshots is not None and req.pos
-                and req.pos <= req.prompt_len and req.pos % bs == 0
-                and req.snap_registered == req.pos // bs
-                and req.snap_key in self.snapshots):
-            # the parked state IS a snapshot still RESIDENT in the
-            # index: skip the D2H trip — swap_in re-adopts it by
-            # content hash.  (The membership check matters: for an
-            # already-recycled entry the host copy is far cheaper than
-            # the swap_lost full recompute.  Eviction between here and
-            # swap_in still falls back to recompute.)
-            req.snap_readopt = True
-        else:
-            s = req.slot
-            req.host_state = [
-                {k: np.ascontiguousarray(jax.device_get(v[s]))
-                 for k, v in pool.items()}
-                for pool in self.pools]
-            self.swapped_slots += 1
-        self.release(req)
-        self.snapshot_out_s += time.perf_counter() - t0
+        with self.tracer.span("snapshot_out", rid=req.rid):
+            bs = self.block_size
+            if (self.snapshots is not None and req.pos
+                    and req.pos <= req.prompt_len and req.pos % bs == 0
+                    and req.snap_registered == req.pos // bs
+                    and req.snap_key in self.snapshots):
+                # the parked state IS a snapshot still RESIDENT in the
+                # index: skip the D2H trip — swap_in re-adopts it by
+                # content hash.  (The membership check matters: for an
+                # already-recycled entry the host copy is far cheaper
+                # than the swap_lost full recompute.  Eviction between
+                # here and swap_in still falls back to recompute.)
+                req.snap_readopt = True
+            else:
+                s = req.slot
+                req.host_state = [
+                    {k: np.ascontiguousarray(jax.device_get(v[s]))
+                     for k, v in pool.items()}
+                    for pool in self.pools]
+                self.swapped_slots += 1
+            self.release(req)
 
     def swap_in(self, req) -> bool | None:
         if req.snap_readopt:
@@ -450,25 +451,24 @@ class RecurrentSlotState(MixerState):
                 return None              # evicted while parked: recompute
             if not self._alloc_slot(req, zero=False):
                 return False
-            t0 = time.perf_counter()
-            slot = jnp.int32(req.slot)
-            for li in range(len(self.pools)):
-                self.pools[li] = _snap_copy(self.pools[li], slot,
-                                            self.snapshots.pools[li],
-                                            jnp.int32(row))
+            with self.tracer.span("snapshot_in", rid=req.rid,
+                                  readopt=True):
+                slot = jnp.int32(req.slot)
+                for li in range(len(self.pools)):
+                    self.pools[li] = _snap_copy(self.pools[li], slot,
+                                                self.snapshots.pools[li],
+                                                jnp.int32(row))
             req.snap_readopt = False
             self.readopted_snapshots += 1
-            self.snapshot_in_s += time.perf_counter() - t0
             return True
         if not self._alloc_slot(req, zero=False):
             return False
-        t0 = time.perf_counter()
-        slot = jnp.int32(req.slot)
-        for li, host in enumerate(req.host_state):
-            self.pools[li] = _slot_restore(self.pools[li], slot, host)
-        jax.block_until_ready([p["h"] for p in self.pools])
-        req.host_state = None
-        self.snapshot_in_s += time.perf_counter() - t0
+        with self.tracer.span("snapshot_in", rid=req.rid):
+            slot = jnp.int32(req.slot)
+            for li, host in enumerate(req.host_state):
+                self.pools[li] = _slot_restore(self.pools[li], slot, host)
+            jax.block_until_ready([p["h"] for p in self.pools])
+            req.host_state = None
         return True
 
     # ------------------------------------------------------------ step

@@ -29,6 +29,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 from repro.serving.request import Request, State
+from repro.serving.tracing import Tracer
 
 
 @dataclass(frozen=True)
@@ -57,7 +58,8 @@ class StepPlan:
 
 
 class Scheduler:
-    def __init__(self, cfg: SchedulerConfig, cache):
+    def __init__(self, cfg: SchedulerConfig, cache,
+                 tracer: Tracer | None = None):
         # ``cache`` implements the MixerState request-lifecycle calls
         # (BlockKVCache for block-only stacks, MixerStateCache for the
         # general composite) — the scheduler never sees layouts.
@@ -65,15 +67,23 @@ class Scheduler:
             raise ValueError(f"unknown preempt_policy {cfg.preempt_policy}")
         self.cfg = cfg
         self.cache = cache
+        self.tracer = tracer if tracer is not None else Tracer()
         self.queue: list[Request] = []
         self.running: list[Request] = []
         self.trace: list[dict] = []
         self._order = 0
+        self.preempts = 0        # evict + swap_out victims
+        self.swap_losts = 0      # parked content evicted while swapped
 
     # ------------------------------------------------------------- events
 
     def _ev(self, step: int, event: str, rid=None, **extra):
         self.trace.append({"step": step, "event": event, "rid": rid, **extra})
+        # per-request lifecycle timeline: the same events stream into
+        # the structured trace (step-level decode/spec_decode summaries
+        # are covered by the engine's own step records)
+        if rid is not None and self.tracer.enabled:
+            self.tracer.request(step, event, rid, **extra)
 
     # ------------------------------------------------------------- submit
 
@@ -112,6 +122,7 @@ class Scheduler:
                     # gone, fall back to recompute-from-scratch (the
                     # request stays in this admission pass as QUEUED)
                     req.reset_for_requeue()
+                    self.swap_losts += 1
                     self._ev(step, "swap_lost", req.rid,
                              preemptions=req.preemptions)
                 elif not ok:
@@ -150,6 +161,7 @@ class Scheduler:
                          key=lambda r: (r.priority, -r._order))
         victim = victims[0]
         self.running.remove(victim)
+        self.preempts += 1
         # a request with no computed KV has nothing worth swapping
         if self.cfg.preempt_policy == "swap" and victim.pos > 0:
             self.cache.swap_out(victim)

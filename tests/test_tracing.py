@@ -1,0 +1,323 @@
+"""Structured tracing + hardware-in-the-loop replay tests.
+
+Covers the observability contract (docs/observability.md): trace schema
+and JSONL round-trip, the disabled-path zero-overhead guard, the
+stats==span-sum invariant that replaced the ad-hoc perf_counter
+accumulators, the Perfetto exporter's track structure, the replay
+driver's analytic-vs-simulated report (incl. the sublinear batched
+decode cost curve), the BENCH_serving.json schema gate, and the pinned
+jamba paged-vs-legacy divergence (ROADMAP known bug) with its
+logit-level dump filed in a trace.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.serving import (TRACE_SCHEMA_VERSION, Tracer, read_trace,
+                           replay_trace, validate_trace)
+from repro.serving.tracing import RECORD_TYPES
+from test_serving import _engine  # bnn_cfg/bnn_params from conftest.py
+
+
+def _traced_run(cfg, params, tmp_path, *, capture_logits=False, **kw):
+    """Small smoke serve: enough requests to overlap prefill+decode."""
+    eng = _engine(cfg, params, **kw)
+    path = str(tmp_path / "trace.jsonl")
+    eng.start_trace(path, capture_logits=capture_logits)
+    rng = np.random.default_rng(0)
+    for i in range(5):
+        eng.submit(rng.integers(0, cfg.vocab, 4 + i), 6)
+    eng.run()
+    eng.stop_trace()
+    return eng, path
+
+
+# ------------------------------------------------------------- schema
+
+def test_trace_jsonl_roundtrip_and_schema(bnn_cfg, bnn_params, tmp_path):
+    eng, path = _traced_run(bnn_cfg, bnn_params, tmp_path)
+    records = read_trace(path)          # validates en route
+    assert records[0]["type"] == "meta"
+    assert records[0]["schema"] == TRACE_SCHEMA_VERSION
+    # the meta record is self-describing: full flat arch config
+    assert records[0]["config"]["name"] == bnn_cfg.name
+    assert records[0]["config"]["n_layers"] == bnn_cfg.n_layers
+    types = {r["type"] for r in records}
+    assert {"meta", "step", "request"} <= types <= set(RECORD_TYPES)
+    # file contents == in-memory ring (ring large enough here)
+    assert records == eng.tracer.events()
+
+    steps = [r for r in records if r["type"] == "step"]
+    assert steps and all(r["dur_s"] >= 0 for r in steps)
+    kinds = {r["kind"] for r in steps}
+    assert any("prefill" in k for k in kinds)
+    assert any("decode" in k for k in kinds)
+    dec = next(r["decode"] for r in steps if "decode" in r)
+    assert dec["rows"] == dec["fed_tokens"] == dec["committed"] \
+        == len(dec["rids"])
+    assert dec["bucket"] >= dec["rows"]
+
+    # request lifecycle: every request submits, admits, and finishes,
+    # in that order, and reaches a first token
+    reqs = [r for r in records if r["type"] == "request"]
+    for rid in range(5):
+        seq = [r["event"] for r in reqs if r["rid"] == rid]
+        assert seq.index("submit") < seq.index("admit") \
+            < seq.index("first_token") <= seq.index("finish")
+
+
+def test_validate_trace_rejects_malformed():
+    with pytest.raises(ValueError, match="empty"):
+        validate_trace([])
+    with pytest.raises(ValueError, match="meta"):
+        validate_trace([{"type": "step", "step": 0, "dur_s": 0.1}])
+    meta = {"type": "meta", "schema": TRACE_SCHEMA_VERSION}
+    with pytest.raises(ValueError, match="schema"):
+        validate_trace([{"type": "meta", "schema": 999}])
+    with pytest.raises(ValueError, match="unknown type"):
+        validate_trace([meta, {"type": "bogus"}])
+    with pytest.raises(ValueError, match="missing field 'dur_s'"):
+        validate_trace([meta, {"type": "step", "step": 0}])
+    validate_trace([meta])              # minimal valid trace
+
+
+# --------------------------------------------------- disabled overhead
+
+def test_disabled_tracing_is_inert(bnn_cfg, bnn_params, monkeypatch):
+    """Tracing off (the default): the hot path never builds or emits a
+    record — emit() raising proves no call site reaches it."""
+    eng = _engine(bnn_cfg, bnn_params)
+    assert not eng.tracer.enabled and eng.tracer.ring is None
+
+    def boom(self, record):
+        raise AssertionError(f"emit() called while disabled: {record}")
+    monkeypatch.setattr(Tracer, "emit", boom)
+    rng = np.random.default_rng(0)
+    for i in range(3):
+        eng.submit(rng.integers(0, bnn_cfg.vocab, 4), 4)
+    eng.run()
+    assert eng.tracer.ring is None
+    # span accounting still ran (it backs stats() either way)
+    assert eng.stats()["wall_s"] > 0
+
+
+def test_tracing_off_matches_on_token_for_token(bnn_cfg, bnn_params,
+                                                tmp_path):
+    """Observability never changes results: same tokens traced or not."""
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, bnn_cfg.vocab, 5) for _ in range(3)]
+    plain = _engine(bnn_cfg, bnn_params)
+    rids = [plain.submit(p, 6) for p in prompts]
+    out_plain = plain.run()
+    traced = _engine(bnn_cfg, bnn_params)
+    traced.start_trace(str(tmp_path / "t.jsonl"), capture_logits=True)
+    rids_t = [traced.submit(p, 6) for p in prompts]
+    out_traced = traced.run()
+    traced.stop_trace()
+    for ra, rb in zip(rids, rids_t):
+        np.testing.assert_array_equal(out_plain[ra], out_traced[rb])
+
+
+# ------------------------------------------------- stats == span sums
+
+def test_stats_totals_equal_trace_span_sums(bnn_cfg, bnn_params,
+                                            tmp_path):
+    """The migrated accounting invariant: stats() wall/swap totals are
+    exactly the sum of the emitted trace records (single source of
+    truth — no second accumulator to drift)."""
+    # forced swap pressure: tiny pool, two growing requests
+    eng = _engine(bnn_cfg, bnn_params, block_size=2, num_blocks=9,
+                  max_batch=2, max_model_len=12, prefill_chunk=4,
+                  preempt_policy="swap")
+    path = str(tmp_path / "trace.jsonl")
+    eng.start_trace(path)
+    rng = np.random.default_rng(1)
+    for _ in range(2):
+        eng.submit(rng.integers(0, bnn_cfg.vocab, 4), 8)
+    eng.run()
+    eng.stop_trace()
+    records = read_trace(path)
+    st = eng.stats()
+
+    steps = [r for r in records if r["type"] == "step"]
+    assert np.isclose(st["wall_s"], sum(r["dur_s"] for r in steps),
+                      rtol=1e-9)
+    spans = [r for r in records if r["type"] == "span"]
+    assert spans, "forced preemption must emit swap spans"
+    by_name = {}
+    for s in spans:
+        by_name[s["name"]] = by_name.get(s["name"], 0.0) + s["dur_s"]
+    sw = st["swap"]
+    assert sw["swap_outs"] >= 1
+    assert np.isclose(sw["swap_out_s"],
+                      by_name.get("swap_out", 0.0)
+                      + by_name.get("snapshot_out", 0.0), rtol=1e-9)
+    assert np.isclose(sw["swap_in_s"],
+                      by_name.get("swap_in", 0.0)
+                      + by_name.get("snapshot_in", 0.0), rtol=1e-9)
+    # swap actions also land on the step records they happened in
+    acts = [r.get("actions", {}) for r in steps]
+    assert sum(a.get("swap_outs", 0) for a in acts) == sw["swap_outs"]
+    assert sum(a.get("preempts", 0) for a in acts) == st["preemptions"]
+
+
+def test_reset_stats_clears_span_accumulators(bnn_cfg, bnn_params):
+    eng = _engine(bnn_cfg, bnn_params)
+    eng.submit(np.arange(4, dtype=np.int32), 4)
+    eng.run()
+    assert eng.stats()["wall_s"] > 0
+    eng.reset_stats()
+    assert eng.stats()["wall_s"] == 0.0
+
+
+# ------------------------------------------------------------- replay
+
+def test_replay_reports_analytic_vs_simulated(bnn_cfg, bnn_params,
+                                              tmp_path):
+    eng, path = _traced_run(bnn_cfg, bnn_params, tmp_path)
+    rep = replay_trace(path)            # config comes from the meta line
+    assert rep["schema_version"] == 1
+    assert rep["arch"] == bnn_cfg.name
+    assert rep["steps"] == len([r for r in read_trace(path)
+                                if r["type"] == "step"])
+    assert {"prefill", "decode"} <= set(rep["by_kind"])
+    for t in rep["by_kind"].values():
+        assert t["analytic_s"] > 0 and t["simulated_s"] > 0
+        assert np.isfinite(t["analytic_over_simulated"])
+    assert rep["finished_requests"] == 5
+    assert rep["committed_tokens"] == sum(
+        t["committed_tokens"] for t in rep["by_kind"].values())
+    assert rep["simulated_tokens_per_s"] > 0
+    assert rep["simulated_fps"] > 0
+
+    # the tentpole claim: mapping decode rows onto DWDM wavelengths /
+    # OXG arrays makes batching SUBLINEAR (rows share fills + TUNE),
+    # unlike the analytic model's sequential-tokens assumption
+    curve = rep["decode_batch_curve"]
+    assert "1" in curve and len(curve) >= 2
+    per_tok = [curve[b]["token_latency_s"] for b in curve]
+    assert all(a > b for a, b in zip(per_tok, per_tok[1:]))
+    bmax = max(curve, key=int)
+    assert curve[bmax]["step_latency_s"] \
+        < int(bmax) * curve["1"]["step_latency_s"]
+    # in-memory records replay identically to the file
+    rep2 = replay_trace(read_trace(path))
+    assert rep2["simulated_s"] == rep["simulated_s"]
+
+
+def test_replay_formats_report(bnn_cfg, bnn_params, tmp_path):
+    from repro.serving import format_report
+    _, path = _traced_run(bnn_cfg, bnn_params, tmp_path)
+    text = format_report(replay_trace(path))
+    assert "analytic" in text and "simulated" in text
+    assert "decode" in text and "TOTAL" in text
+
+
+# ----------------------------------------------------------- perfetto
+
+def test_perfetto_export_track_structure(bnn_cfg, bnn_params, tmp_path):
+    from repro.launch.trace_view import export_perfetto
+    _, path = _traced_run(bnn_cfg, bnn_params, tmp_path)
+    out = str(tmp_path / "trace.perfetto.json")
+    n = export_perfetto(path, out)
+    doc = json.load(open(out))
+    evs = doc["traceEvents"]
+    assert n == len(evs) > 0
+    records = read_trace(path)
+
+    # golden track structure: engine steps + one named track per rid
+    names = {(e["pid"], e["args"]["name"]) for e in evs if e["ph"] == "M"
+             and e["name"] in ("process_name", "thread_name")}
+    assert (1, "engine") in names and (1, "steps") in names
+    assert (2, "requests") in names
+    for rid in range(5):
+        assert (2, f"rid {rid}") in names
+
+    slices = [e for e in evs if e["ph"] == "X"]
+    n_steps = len([r for r in records if r["type"] == "step"])
+    assert len([e for e in slices if e["pid"] == 1 and e["tid"] == 1]) \
+        == n_steps
+    assert all(e["ts"] >= 0 and e["dur"] >= 0 for e in slices)
+    # every request shows a queued and a running slice
+    for rid in range(5):
+        tid = rid + 1
+        mine = {e["name"] for e in slices
+                if e["pid"] == 2 and e["tid"] == tid}
+        assert {"queued", "running"} <= mine
+    # step slices are named by kind and carry the step payload
+    step_names = {e["name"] for e in slices if e["pid"] == 1}
+    assert any("decode" in n for n in step_names)
+
+
+# ------------------------------------------------------ bench schema
+
+def test_bench_json_schema_gate(tmp_path):
+    import sys
+    sys.path.insert(0, "benchmarks")
+    try:
+        from serving_bench import (BENCH_SCHEMA_VERSION, check_bench_json,
+                                   write_bench_json)
+    finally:
+        sys.path.pop(0)
+    row = {"arch": "bnn-lm-100m", "decode_tokens_per_s": 1.0,
+           "total_tokens_per_s": 2.0, "p50_latency_s": 0.1,
+           "p99_latency_s": 0.2, "modeled_tokens_per_s": 1e6,
+           "replay": {"schema_version": 1, "simulated_tokens_per_s": 1e6,
+                      "simulated_fps": 10.0, "analytic_s": 1.0,
+                      "simulated_s": 0.5}}
+    path = str(tmp_path / "BENCH_serving.json")
+    doc = write_bench_json(path, [row], {"smoke": True})
+    assert doc["schema_version"] == BENCH_SCHEMA_VERSION
+    assert check_bench_json(path) == []
+
+    bad = dict(doc)
+    bad["rows"] = [{k: v for k, v in row.items()
+                    if k != "p99_latency_s"}]
+    bad_path = str(tmp_path / "bad.json")
+    json.dump(bad, open(bad_path, "w"))
+    problems = check_bench_json(bad_path)
+    assert any("p99_latency_s" in p for p in problems)
+    json.dump({"schema_version": 999}, open(bad_path, "w"))
+    assert check_bench_json(bad_path)
+
+
+# ------------------------------------- jamba hybrid differential (bug)
+
+@pytest.mark.slow  # jamba hybrid compile
+def test_jamba_paged_matches_legacy_engine_level(jamba_models):
+    """The hybrid family's missing engine-level differential: paged
+    engine vs the dense-slot legacy oracle, token-identical (no mesh
+    context — contrast with the pinned serve-level divergence below)."""
+    from test_prefix_swap import legacy_greedy
+    cfg, params = jamba_models
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, (2, 5)).astype(np.int32)
+    eng = _engine(cfg, params, max_model_len=16)
+    rids = [eng.submit(p, 5) for p in prompts]
+    out = eng.run()
+    got = np.stack([out[r] for r in rids])
+    want = legacy_greedy(cfg, params, prompts, 5)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.slow  # two serve() runs end-to-end
+@pytest.mark.xfail(strict=True, reason=(
+    "known pre-existing divergence (ROADMAP): jamba hybrid paged vs "
+    "legacy under serve()'s mesh context diverges at batch 2, "
+    "prompt 5 / gen 5 — numeric tie-flip, logit dump in the trace"))
+def test_jamba_serve_paged_matches_legacy(tmp_path):
+    """Pins the known bug: when this xpasses, the divergence is fixed —
+    delete the xfail marker and fold jamba into
+    test_serve_paged_matches_legacy_all_families."""
+    from repro.launch.serve import serve
+    kw = dict(smoke=True, batch=2, prompt_len=5, gen=5, precision="bnn")
+    trace_path = str(tmp_path / "jamba_logits.jsonl")
+    got = serve("jamba-1.5-large-398b", engine="paged", verbose=False,
+                trace=trace_path, capture_logits=True, **kw)
+    # the logit-level dump the ROADMAP bug report asks for is now on
+    # disk: per-step prefill/decode logits for the diverging run
+    dumped = [r for r in read_trace(trace_path) if r["type"] == "step"]
+    assert any("logits" in r.get("decode", {}) for r in dumped)
+    want = serve("jamba-1.5-large-398b", engine="legacy", **kw)
+    np.testing.assert_array_equal(got, want)
