@@ -49,7 +49,8 @@ from repro import configs
 from repro.configs.base import reduced
 from repro.models import transformer as M
 from repro.serving import (Engine, EngineConfig, SamplingParams,
-                           layer_layouts, nearest_rank, replay_trace)
+                           ShardedEngine, layer_layouts, nearest_rank,
+                           replay_trace)
 
 BENCH_SCHEMA_VERSION = 1
 
@@ -60,6 +61,9 @@ BENCH_REQUIRED_ROW_KEYS = ("arch", "decode_tokens_per_s",
                            "p99_latency_s", "modeled_tokens_per_s")
 BENCH_REQUIRED_REPLAY_KEYS = ("schema_version", "simulated_tokens_per_s",
                               "simulated_fps", "analytic_s", "simulated_s")
+# sharded rows (shards > 1) additionally carry per-host breakdowns
+BENCH_REQUIRED_SHARD_KEYS = ("shard", "alive", "decoded_tokens", "wall_s",
+                             "decode_tokens_per_s", "swap_losts")
 
 # one row per mixer family: paged KV, slot (ssm), paged latent (mla),
 # ring buffer (sliding window), hybrid (slots + paged KV per layer)
@@ -92,7 +96,7 @@ def bench_arch(arch: str, *, smoke: bool, n_requests: int, rate_hz: float,
                shared_frac: float = 0.5, spec_k: int = 0,
                temperature: float = 0.0,
                trace_path: str | None = None,
-               replay_photonic: bool = False) -> dict:
+               replay_photonic: bool = False, n_shards: int = 1) -> dict:
     cfg = configs.get_config(arch)
     if smoke:
         cfg = reduced(cfg)
@@ -122,7 +126,19 @@ def bench_arch(arch: str, *, smoke: bool, n_requests: int, rate_hz: float,
         max_model_len=max_len, accelerator=accelerator,
         prefix_cache=prefix_cache, preempt_policy=preempt_policy,
         spec_k=spec_k)
-    eng = Engine(params, cfg, ecfg)
+    if n_shards > 1:
+        # weak scaling: each simulated host carries the single-shard
+        # offered load (requests and arrival rate scale with the shard
+        # count), so the aggregate — the sum of per-host decode rates,
+        # each over ITS OWN stepped wall — measures fleet capacity the
+        # way N concurrent hosts would deliver it.  The open-loop
+        # tokens/s column does NOT scale in this single-process
+        # simulation (shards step sequentially); the per-shard rows do.
+        n_requests *= n_shards
+        rate_hz *= n_shards
+        eng = ShardedEngine(params, cfg, ecfg, n_shards)
+    else:
+        eng = Engine(params, cfg, ecfg)
 
     def sampling(i: int) -> SamplingParams:
         return SamplingParams(temperature=temperature, seed=seed + i)
@@ -139,10 +155,21 @@ def bench_arch(arch: str, *, smoke: bool, n_requests: int, rate_hz: float,
     # power-of-two bucket — a 2-token request finishes straight off its
     # prefill logits before a second prefill completes, which would
     # leave the multi-row decode shapes to compile mid-measurement
-    warm = [eng.submit(prompts[0], 2 + max_batch) for _ in range(max_batch)]
-    eng.run()
-    for w in warm:
-        eng.requests.pop(w)
+    if n_shards > 1:
+        # every shard walks its own jit buckets through warmup
+        warm = [eng.submit(prompts[0], 2 + max_batch, shard=i)
+                for i in range(n_shards) for _ in range(max_batch)]
+        eng.run()
+        for w in warm:
+            i = eng.shard_of.pop(w)
+            eng.engines[i].requests.pop(w)
+            eng.requests.pop(w)
+    else:
+        warm = [eng.submit(prompts[0], 2 + max_batch)
+                for _ in range(max_batch)]
+        eng.run()
+        for w in warm:
+            eng.requests.pop(w)
     # warmup polluted every counter (and cached its prompt): the
     # engine's lifetime token/wall totals feed the modeled-accelerator
     # report, so measure the open-loop window from a clean slate
@@ -151,19 +178,28 @@ def bench_arch(arch: str, *, smoke: bool, n_requests: int, rate_hz: float,
     # measured window (replay then prices only measured steps)
     if trace_path or replay_photonic:
         # no file: keep a ring big enough that replay sees every step
-        eng.start_trace(trace_path, ring=1 << 16)
+        if n_shards > 1:
+            # per-shard files: {prefix}.shard{i}.jsonl
+            prefix = (trace_path[:-len(".jsonl")]
+                      if trace_path and trace_path.endswith(".jsonl")
+                      else trace_path)
+            eng.start_trace(prefix, ring=1 << 16)
+        else:
+            eng.start_trace(trace_path, ring=1 << 16)
 
+    is_idle = ((lambda: eng.idle) if n_shards > 1
+               else (lambda: eng.scheduler.idle))
     pending = list(range(n_requests))
     submitted: dict[int, float] = {}       # rid -> arrival offset
     t0 = time.perf_counter()
-    while pending or not eng.scheduler.idle:
+    while pending or not is_idle():
         now = time.perf_counter() - t0
         while pending and arrivals[pending[0]] <= now:
             i = pending.pop(0)
             rid = eng.submit(prompts[i], gen, arrival_s=arrivals[i],
                              sampling=sampling(i))
             submitted[rid] = arrivals[i]
-        if eng.scheduler.idle:
+        if is_idle():
             if pending:
                 time.sleep(min(arrivals[pending[0]] - now, 0.01))
             continue
@@ -171,22 +207,37 @@ def bench_arch(arch: str, *, smoke: bool, n_requests: int, rate_hz: float,
     wall = time.perf_counter() - t0
 
     replay = None
+    replay_per_shard = None
     if trace_path or replay_photonic:
-        records = eng.tracer.events()
-        eng.stop_trace()
-        if replay_photonic:
-            src = trace_path if trace_path else records
-            replay = replay_trace(src, cfg=cfg, accelerator=accelerator)
+        if n_shards > 1:
+            shard_records = [e.tracer.events() for e in eng.engines]
+            eng.stop_trace()
+            if replay_photonic:
+                replay_per_shard = [
+                    replay_trace(rs, cfg=cfg, accelerator=accelerator)
+                    for rs in shard_records]
+        else:
+            records = eng.tracer.events()
+            eng.stop_trace()
+            if replay_photonic:
+                src = trace_path if trace_path else records
+                replay = replay_trace(src, cfg=cfg, accelerator=accelerator)
 
     lats = sorted((eng.requests[rid].finish_s - t0) - arr
                   for rid, arr in submitted.items()
                   if eng.requests[rid].finish_s is not None)
+    if n_shards > 1:
+        return _sharded_row(arch, eng, n_requests, wall, lats, n_shards,
+                            trace_path, replay_per_shard)
     st = eng.stats()
     pc, sw, mx, sp = (st["prefix_cache"], st["swap"], st["mixer"],
                       st["speculative"])
     blk, slt = mx.get("blocks"), mx.get("slots")
     return {
-        "arch": arch, "requests": n_requests,
+        "arch": arch, "requests": n_requests, "shards": 1,
+        # per-host span-wall rate — the number the sharded rows
+        # aggregate, so 1-vs-N scaling compares like with like
+        "aggregate_decode_tokens_per_s": st["decode_tokens_per_s"],
         # decode tokens over the OPEN-LOOP wall (arrival waits included);
         # the engine's decode/total split over compute wall is in `st`
         "decode_tokens_per_s": st["decoded_tokens"] / wall,
@@ -216,6 +267,85 @@ def bench_arch(arch: str, *, smoke: bool, n_requests: int, rate_hz: float,
         "accelerator": st["photonic"]["accelerator"],
         "trace_path": trace_path,
         "replay": replay,
+    }
+
+
+def _sharded_row(arch: str, eng, n_requests: int, wall: float, lats,
+                 n_shards: int, trace_path, replay_per_shard) -> dict:
+    """Assemble a bench row for a ShardedEngine run: the standard
+    columns aggregate across shards (rates and counters sum, pool
+    occupancies take the worst shard, modeled accelerator rates sum to
+    the fleet figure), plus per-shard rows and the aggregate per-host
+    decode tokens/s the scaling gate reads."""
+    sst = eng.stats()
+    sub = [e.stats() for e in eng.engines]
+
+    def ssum(*path):
+        out = 0
+        for s in sub:
+            v = s
+            for k in path:
+                v = v[k]
+            out += v
+        return out
+
+    def occ_max(fam, key="occupancy"):
+        vals = [m[fam][key] for m in (s["mixer"] for s in sub)
+                if fam in m and not np.isnan(m[fam][key])]
+        return max(vals) if vals else float("nan")
+
+    drafted = ssum("speculative", "draft_tokens")
+    accepted = ssum("speculative", "accepted_tokens")
+    produced = sum(e._decode_produced for e in eng.engines)
+    rows_ = sum(e._decode_rows for e in eng.engines)
+    pq = ssum("prefix_cache", "queries")
+    phits = ssum("prefix_cache", "hits")
+    has_slots = any("slots" in s["mixer"] for s in sub)
+    has_blocks = any("blocks" in s["mixer"] for s in sub)
+    return {
+        "arch": arch, "requests": n_requests, "shards": n_shards,
+        "aggregate_decode_tokens_per_s":
+            sst["aggregate_decode_tokens_per_s"],
+        "per_shard": sst["per_shard"],
+        "migrations": sst["migrations"],
+        "requeued_lost": sst["requeued_lost"],
+        "decode_tokens_per_s": sst["decoded_tokens"] / wall,
+        "total_tokens_per_s":
+            (sst["decoded_tokens"] + sst["prefill_tokens"]) / wall,
+        "p50_latency_s": nearest_rank(lats, 50),
+        "p99_latency_s": nearest_rank(lats, 99),
+        "max_concurrent": max(s["max_concurrent_decode"] for s in sub),
+        "acceptance_rate": accepted / drafted if drafted else 0.0,
+        "tokens_per_decode_step": produced / rows_ if rows_ else 0.0,
+        "modeled_spec_speedup":
+            sub[0]["photonic"]["modeled_spec_speedup"],
+        "preemptions": ssum("preemptions"),
+        "prefix_hit_rate": phits / pq if pq else 0.0,
+        "skipped_prefill_tokens":
+            ssum("prefix_cache", "skipped_prefill_tokens"),
+        "snapshot_hits": ssum("prefix_cache", "snapshot_hits"),
+        "snapshot_occupancy": (
+            max(s["prefix_cache"].get("snapshot_occupancy", 0.0)
+                for s in sub) if has_slots else float("nan")),
+        "ring_reuse_rate": (occ_max("blocks", "ring_reuse_rate")
+                            if has_blocks else 0.0),
+        "block_occupancy": (occ_max("blocks") if has_blocks
+                            else float("nan")),
+        "slot_occupancy": (occ_max("slots") if has_slots
+                           else float("nan")),
+        "families": "+".join(f"{k}:{v['layout']}"
+                             for k, v in sub[0]["mixer"].items()),
+        "swap_s": ssum("swap", "swap_out_s") + ssum("swap", "swap_in_s"),
+        "swaps": ssum("swap", "swap_outs") + ssum("swap", "swap_ins"),
+        # fleet figure: N modeled accelerators decode concurrently
+        "modeled_tokens_per_s":
+            ssum("photonic", "modeled_tokens_per_s"),
+        "modeled_effective_tokens_per_s":
+            ssum("photonic", "modeled_effective_tokens_per_s"),
+        "accelerator": sub[0]["photonic"]["accelerator"],
+        "trace_path": trace_path,
+        "replay": None,
+        "replay_per_shard": replay_per_shard,
     }
 
 
@@ -259,6 +389,25 @@ def check_bench_json(path: str) -> list[str]:
             for k in BENCH_REQUIRED_REPLAY_KEYS:
                 if k not in rep:
                     problems.append(f"row {i} replay: missing {k!r}")
+        if row.get("shards", 1) > 1:
+            per = row.get("per_shard") or []
+            if len(per) != row["shards"]:
+                problems.append(
+                    f"row {i} ({row.get('arch')}): {len(per)} per_shard "
+                    f"entries for shards={row['shards']}")
+            if "aggregate_decode_tokens_per_s" not in row:
+                problems.append(f"row {i}: missing "
+                                "'aggregate_decode_tokens_per_s'")
+            for j, p in enumerate(per):
+                for k in BENCH_REQUIRED_SHARD_KEYS:
+                    if k not in p:
+                        problems.append(
+                            f"row {i} per_shard[{j}]: missing {k!r}")
+            for j, rp in enumerate(row.get("replay_per_shard") or []):
+                for k in BENCH_REQUIRED_REPLAY_KEYS:
+                    if k not in rp:
+                        problems.append(
+                            f"row {i} replay_per_shard[{j}]: missing {k!r}")
     return problems
 
 
@@ -297,6 +446,21 @@ def main():
     ap.add_argument("--replay-photonic", action="store_true",
                     help="re-price recorded steps through the photonic "
                          "simulator; adds simulated tok/s + FPS")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="decode shards over the data axis (simulate "
+                         "hosts with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--shard-sweep", default=None, metavar="N,N,...",
+                    help="run each arch at several shard counts, one "
+                         "row per count (e.g. 1,2,4); overrides "
+                         "--shards")
+    ap.add_argument("--require-scaling", type=float, default=None,
+                    metavar="X",
+                    help="CI gate over a --shard-sweep: aggregate "
+                         "per-host decode tok/s must be monotone "
+                         "nondecreasing in the shard count (2%% "
+                         "tolerance) and the 2-shard factor over "
+                         "1 shard must reach X")
     ap.add_argument("--bench-json", default=None, metavar="PATH",
                     help="persist results as schema-versioned JSON")
     ap.add_argument("--check-json", default=None, metavar="PATH",
@@ -330,11 +494,17 @@ def main():
           f"{'blk-occ':>8} {'slot-occ':>9} {'snap-occ':>9} "
           f"{'swap(ms)':>9} "
           f"{'modeled tok/s':>14} {'eff tok/s':>12} {'spec-x':>7}")
+    shard_counts = ([int(x) for x in args.shard_sweep.split(",")]
+                    if args.shard_sweep else [args.shards])
     failures = []
     rows = []
     for arch in archs:
-        tpath = (os.path.join(args.trace,
-                              f"trace_{arch.replace('/', '_')}.jsonl")
+      for n_sh in shard_counts:
+        suffix = f"@{n_sh}sh" if len(shard_counts) > 1 or n_sh > 1 else ""
+        tpath = (os.path.join(
+                     args.trace,
+                     f"trace_{arch.replace('/', '_')}"
+                     f"{suffix.replace('@', '_')}.jsonl")
                  if args.trace else None)
         r = bench_arch(arch, smoke=args.smoke, n_requests=n, rate_hz=rate,
                        prompt_len=plen, gen=gen, max_batch=args.max_batch,
@@ -345,9 +515,16 @@ def main():
                        shared_frac=args.shared_frac,
                        spec_k=args.spec_k, temperature=args.temperature,
                        trace_path=tpath,
-                       replay_photonic=args.replay_photonic)
+                       replay_photonic=args.replay_photonic,
+                       n_shards=n_sh)
         rows.append(r)
-        print(f"{r['arch']:<22} {r['decode_tokens_per_s']:>9.1f} "
+        if n_sh > 1:
+            per = "  ".join(
+                f"s{p['shard']}:{p['decode_tokens_per_s']:.1f}"
+                for p in r["per_shard"])
+            print(f"{arch + suffix:<22} aggregate per-host decode tok/s="
+                  f"{r['aggregate_decode_tokens_per_s']:>9.1f}  [{per}]")
+        print(f"{r['arch'] + suffix:<22} {r['decode_tokens_per_s']:>9.1f} "
               f"{r['total_tokens_per_s']:>9.1f} "
               f"{r['p50_latency_s']:>8.3f} {r['p99_latency_s']:>8.3f} "
               f"{r['max_concurrent']:>8d} {r['preemptions']:>6d} "
@@ -372,6 +549,30 @@ def main():
         for r in rows:
             if r["replay"] is not None:
                 print(format_report(r["replay"]))
+            for rep in r.get("replay_per_shard") or []:
+                print(f"[replay] shard {rep.get('shard')}:")
+                print(format_report(rep))
+    if args.require_scaling is not None and len(shard_counts) > 1:
+        bad = []
+        for arch in archs:
+            series = sorted((r["shards"], r["aggregate_decode_tokens_per_s"])
+                            for r in rows if r["arch"] == arch)
+            for (a, ra), (b, rb) in zip(series, series[1:]):
+                if rb < 0.98 * ra:
+                    bad.append(f"{arch}: {rb:.1f} tok/s at {b} shards < "
+                               f"{ra:.1f} at {a} (not monotone)")
+            by_n = dict(series)
+            if 1 in by_n and 2 in by_n and by_n[1] > 0:
+                factor = by_n[2] / by_n[1]
+                if factor < args.require_scaling:
+                    bad.append(f"{arch}: 2-shard factor {factor:.2f}x < "
+                               f"required {args.require_scaling}x")
+                else:
+                    print(f"[bench] {arch}: 2-shard scaling "
+                          f"{factor:.2f}x >= {args.require_scaling}x OK")
+        if bad:
+            raise SystemExit("--require-scaling violations:\n  "
+                             + "\n  ".join(bad))
     if args.bench_json:
         params = {"smoke": args.smoke, "requests": n, "rate_hz": rate,
                   "prompt_len": plen, "gen": gen,
@@ -381,7 +582,8 @@ def main():
                   "prefix_cache": bool(args.prefix_cache),
                   "shared_frac": args.shared_frac, "spec_k": args.spec_k,
                   "temperature": args.temperature,
-                  "replay_photonic": args.replay_photonic}
+                  "replay_photonic": args.replay_photonic,
+                  "shards": shard_counts}
         write_bench_json(args.bench_json, rows, params)
         print(f"[bench] wrote {args.bench_json} "
               f"(schema v{BENCH_SCHEMA_VERSION}, {len(rows)} rows)")

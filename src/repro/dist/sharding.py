@@ -91,3 +91,37 @@ def batch_shardings(mesh, bspec, rules: dict[str, Any]):
 
 def replicated(mesh) -> NamedSharding:
     return NamedSharding(mesh, PartitionSpec())
+
+
+def shard_meshes(n_shards: int, *, mesh=None, devices=None):
+    """Split the data axis into ``n_shards`` per-shard decode meshes.
+
+    Each shard gets a single-pod ("data", "model") mesh over a disjoint
+    slice of the parent mesh's devices (or of ``devices`` /
+    ``jax.devices()`` when no parent mesh is given).  With fewer
+    physical devices than shards — the single-process test case — the
+    device list is tiled round-robin; shard isolation (pools, jit
+    caches, indexes) comes from each shard's own Engine instance, not
+    from the mesh, so sharing a device under
+    ``xla_force_host_platform_device_count`` simulation keeps the same
+    semantics: shards are isolation domains first, hardware second.
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    from jax.sharding import Mesh
+    import numpy as np
+
+    if devices is None:
+        devices = (list(mesh.devices.flat) if mesh is not None
+                   else list(jax.devices()))
+    if len(devices) >= n_shards:
+        per = len(devices) // n_shards
+        leads = [devices[i * per] for i in range(n_shards)]
+    else:
+        leads = [devices[i % len(devices)] for i in range(n_shards)]
+    # one PRIMARY device per shard: the engine datapath is single-device
+    # within a shard (params pinned, pools donated in place), so each
+    # shard's mesh is 1x1 over its lead — model-parallel-within-shard
+    # would widen the model axis here
+    return [Mesh(np.asarray([d], dtype=object).reshape(1, 1),
+                 axis_names=("data", "model")) for d in leads]

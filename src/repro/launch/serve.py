@@ -53,7 +53,7 @@ def _setup(arch, smoke, multi_pod, precision, seed):
         cfg = cfg.replace(precision=precision)
     C.set_sharding_context(mesh, S.rules_decode(multi_pod))
     params, _ = M.init(jax.random.PRNGKey(seed), cfg)
-    return cfg, params
+    return cfg, params, mesh
 
 
 def _prompts(cfg, batch, prompt_len, seed):
@@ -67,7 +67,7 @@ def serve_legacy(arch: str, *, smoke: bool = False, multi_pod: bool = False,
                  greedy: bool = True):
     """Reference loop: batched dense-slot cache, token-by-token prefill."""
     try:
-        cfg, params = _setup(arch, smoke, multi_pod, precision, seed)
+        cfg, params, _ = _setup(arch, smoke, multi_pod, precision, seed)
         max_len = prompt_len + gen
         caches = M.init_cache(cfg, batch, max_len)
         prompts = _prompts(cfg, batch, prompt_len, seed)
@@ -106,17 +106,19 @@ def serve(arch: str, *, smoke: bool = False, multi_pod: bool = False,
           sampling_seed: int = 0, stop: tuple[int, ...] = (),
           spec_k: int = 0, spec_ngram: int = 3,
           trace: str | None = None, replay_photonic: bool = False,
-          capture_logits: bool = False):
+          capture_logits: bool = False, shards: int = 1):
     """Serve ``batch`` synthetic requests; returns (batch, prompt+gen)
     token ids (prompt prefix included, matching the legacy loop).  With
     stop tokens the generations can end early — the result is then a
-    ragged list instead of a stacked array."""
+    ragged list instead of a stacked array.  ``shards > 1`` shards the
+    decode batch over the data axis (one engine per shard — see
+    serving/sharded.py); output stays token-identical to 1 shard."""
     if engine == "legacy":
         return serve_legacy(arch, smoke=smoke, multi_pod=multi_pod,
                             batch=batch, prompt_len=prompt_len, gen=gen,
                             precision=precision, seed=seed, greedy=greedy)
     try:
-        cfg, params = _setup(arch, smoke, multi_pod, precision, seed)
+        cfg, params, mesh = _setup(arch, smoke, multi_pod, precision, seed)
         max_len = prompt_len + gen
         bs = block_size or max(8, min(32, prompt_len))
         ecfg = EngineConfig(
@@ -130,7 +132,14 @@ def serve(arch: str, *, smoke: bool = False, multi_pod: bool = False,
             preempt_policy=preempt_policy,
             snapshot_slots=snapshot_slots,
             spec_k=spec_k, spec_ngram=spec_ngram)
-        eng = Engine(params, cfg, ecfg)
+        if shards > 1:
+            from repro.serving import ShardedEngine
+            eng = ShardedEngine(
+                params, cfg, ecfg, shards,
+                meshes=S.shard_meshes(shards, mesh=mesh),
+                rules=S.rules_decode(False))
+        else:
+            eng = Engine(params, cfg, ecfg)
         if trace or replay_photonic:
             eng.start_trace(trace, ring=1 << 16,
                             capture_logits=capture_logits)
@@ -146,17 +155,37 @@ def serve(arch: str, *, smoke: bool = False, multi_pod: bool = False,
         out = eng.run()
         stats = eng.stats()
         if trace or replay_photonic:
-            records = eng.tracer.events()
+            shard_records = ([e.tracer.events() for e in eng.engines]
+                             if shards > 1 else [eng.tracer.events()])
             eng.stop_trace()
             if trace and verbose:
                 print(f"[serve] trace -> {trace} "
                       f"(view: python -m repro.launch.trace_view {trace})")
             if replay_photonic:
                 from repro.serving import format_report, replay_trace
-                rep = replay_trace(trace if trace else records, cfg=cfg,
-                                   accelerator=accelerator)
-                print(format_report(rep))
-        if verbose:
+                if shards > 1:
+                    for recs in shard_records:
+                        print(format_report(replay_trace(
+                            recs, cfg=cfg, accelerator=accelerator)))
+                else:
+                    rep = replay_trace(trace if trace else shard_records[0],
+                                       cfg=cfg, accelerator=accelerator)
+                    print(format_report(rep))
+        if verbose and shards > 1:
+            for row in stats["per_shard"]:
+                print(f"[serve] shard {row['shard']}"
+                      f"{'' if row['alive'] else ' (dead)'}: "
+                      f"decoded={row['decoded_tokens']} "
+                      f"decode-tokens/s={row['decode_tokens_per_s']:.1f} "
+                      f"finished={row['finished']} "
+                      f"swap_losts={row['swap_losts']}")
+            print(f"[serve] {arch} precision={cfg.precision} "
+                  f"shards={shards} batch={batch} aggregate "
+                  f"decode-tokens/s="
+                  f"{stats['aggregate_decode_tokens_per_s']:.1f} "
+                  f"migrations={stats['migrations']} "
+                  f"requeued_lost={stats['requeued_lost']}")
+        elif verbose:
             ph, pc, sw = (stats["photonic"], stats["prefix_cache"],
                           stats["swap"])
             print(f"[serve] {arch} precision={cfg.precision} batch={batch} "
@@ -247,6 +276,10 @@ def main():
     ap.add_argument("--replay-photonic", action="store_true",
                     help="replay the recorded steps through the "
                          "photonic simulator (analytic-vs-simulated)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="decode shards over the data axis (1 = single "
+                         "engine; simulate hosts with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     args = ap.parse_args()
     serve(args.arch, smoke=args.smoke, multi_pod=args.multi_pod,
           batch=args.batch, prompt_len=args.prompt_len, gen=args.gen,
@@ -260,7 +293,8 @@ def main():
           top_k=args.top_k, top_p=args.top_p,
           sampling_seed=args.sampling_seed, stop=tuple(args.stop_token),
           spec_k=args.spec_k, spec_ngram=args.spec_ngram,
-          trace=args.trace, replay_photonic=args.replay_photonic)
+          trace=args.trace, replay_photonic=args.replay_photonic,
+          shards=args.shards)
 
 
 if __name__ == "__main__":

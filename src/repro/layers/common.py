@@ -9,6 +9,7 @@ repro.dist.sharding.rules).  Activations are annotated through ``lsc``
 """
 from __future__ import annotations
 
+import contextlib
 import threading
 from typing import Any
 
@@ -40,6 +41,21 @@ def set_sharding_context(mesh, rules: dict[str, Any] | None):
 def clear_sharding_context():
     _CTX.mesh = None
     _CTX.rules = None
+
+
+@contextlib.contextmanager
+def sharding_context(mesh, rules: dict[str, Any] | None):
+    """Scoped set/restore of the logical sharding context.
+
+    Per-shard engines trace their jit closures under their own mesh;
+    nesting must restore the enclosing shard's context, not clear it.
+    """
+    prev_mesh, prev_rules = _CTX.mesh, _CTX.rules
+    set_sharding_context(mesh, rules)
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev_mesh, prev_rules
 
 
 def logical_to_pspec(axes: tuple[str | None, ...], rules: dict[str, Any],

@@ -122,6 +122,17 @@ def forward(params, x: Array, *, top_k: int, kind: str = "swiglu",
     §Perf; dispatch_groups=1 reproduces the paper-faithful global
     dispatch baseline.  Capacity is per-group, so results are identical
     up to capacity-drop boundaries (property-tested).
+
+    capacity_factor <= 0 selects DROP-FREE dispatch: capacity = every
+    (token, choice) slot, so no token is ever dropped and each token's
+    output is independent of the rest of the batch.  Inference paths
+    MUST use this mode — with a finite capacity, which tokens overflow
+    an expert depends on batch composition and padded positions, so the
+    same request gives different logits at different chunk widths or
+    bucket paddings (the root cause of the jamba serve()-vs-legacy
+    divergence: a 5-valid-token prefill chunk dropped a real token at
+    widths 5-7 but not at 8, while the legacy per-token loop never
+    dropped at all).
     """
     b, t, d = x.shape
     n_tok = b * t
@@ -139,7 +150,10 @@ def forward(params, x: Array, *, top_k: int, kind: str = "swiglu",
     g = dispatch_groups if dispatch_groups and n_tok % dispatch_groups == 0 \
         else 1
     tg = n_tok // g
-    cap = max(min_capacity, int(capacity_factor * tg * top_k / e))
+    if capacity_factor <= 0:                 # drop-free (inference)
+        cap = tg * top_k
+    else:
+        cap = max(min_capacity, int(capacity_factor * tg * top_k / e))
 
     x3d = x.reshape(g, tg, d)
     x3d = C.lsc(x3d, "batch", None, None)

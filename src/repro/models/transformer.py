@@ -156,8 +156,11 @@ def _decode_layer(params, cfg: ArchConfig, mix: str, f: str, x, cache, length,
     if f != "none":
         h = C.norm(x, params["norm2"], cfg.norm, cfg.norm_eps)
         if f == "moe":
+            # drop-free routing (capacity_factor=0): inference must not
+            # let batch composition or padding decide which tokens keep
+            # their expert slots (see moe.forward)
             y, _ = moe.forward(params["ffn"], h, top_k=cfg.top_k, kind=cfg.act,
-                               capacity_factor=cfg.capacity_factor,
+                               capacity_factor=0.0,
                                precision=precision)
         else:
             y = ffn.forward(params["ffn"], h, cfg.act, precision)
@@ -430,8 +433,10 @@ def _paged_ffn(params, cfg: ArchConfig, f: str, x, precision):
         return x
     h = C.norm(x, params["norm2"], cfg.norm, cfg.norm_eps)
     if f == "moe":
+        # drop-free routing: a finite capacity makes logits depend on
+        # chunk width / bucket padding (jamba divergence root cause)
         y, _ = moe.forward(params["ffn"], h, top_k=cfg.top_k, kind=cfg.act,
-                           capacity_factor=cfg.capacity_factor,
+                           capacity_factor=0.0,
                            precision=precision)
     else:
         y = ffn.forward(params["ffn"], h, cfg.act, precision)

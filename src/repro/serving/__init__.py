@@ -10,8 +10,9 @@ from repro.serving.mixer_state import (                             # noqa: F401
     MixerState, RecurrentSlotState, SlotSnapshotIndex, layer_layouts,
     ring_block_count)
 from repro.serving.replay import (                                  # noqa: F401
-    TraceReplayer, format_report, replay_trace)
+    TraceReplayer, format_report, replay_trace, spec_chunk_cap)
 from repro.serving.request import Request, State                    # noqa: F401
+from repro.serving.sharded import ShardedEngine                     # noqa: F401
 from repro.serving.scheduler import (                               # noqa: F401
     Scheduler, SchedulerConfig, StepPlan)
 from repro.serving.tracing import (                                 # noqa: F401

@@ -483,17 +483,42 @@ class BlockKVCache(MixerState):
 
     # ---------------------------------------------------- swap-to-host
 
-    def swap_out(self, req):
+    def swap_out(self, req, peer: "BlockKVCache | None" = None):
         """Park req's blocks off the device.  Blocks REGISTERED in the
         prefix index skip the D2H copy — the index keeps them resident
         and ``swap_in`` re-adopts them by content hash.  The remaining
         blocks go to host buffers; either way req drops every device
-        reference."""
+        reference.
+
+        ``peer`` turns this into SWAP-TO-PEER: the re-adoption depth is
+        computed against the PEER's prefix index instead of our own —
+        leading blocks whose hash chain the destination already holds
+        are not serialized at all (the peer's ``swap_in`` re-adopts
+        them locally), and only the tail crosses shards.  The request's
+        prefix-registration bookkeeping is rebased onto the adopted
+        chain so registration resumes cleanly on the destination."""
         with self.tracer.span("swap_out", rid=req.rid) as sp:
             readopt = 0
-            if self.prefix is not None and req.n_registered and \
-                    self.blocks_for(req.pos) <= (self.ring_blocks
-                                                 or self.max_blocks_per_seq):
+            no_wrap = self.blocks_for(req.pos) <= (self.ring_blocks
+                                                   or self.max_blocks_per_seq)
+            if peer is not None:
+                bs = self.block_size
+                parent = ""
+                if peer.prefix is not None and no_wrap:
+                    n_full = min(req.pos, req.prompt_len) // bs
+                    if self.ring_blocks:
+                        n_full = min(n_full, self.ring_blocks)
+                    while readopt < n_full:
+                        key = chunk_key(
+                            parent,
+                            req.prompt[readopt * bs:(readopt + 1) * bs])
+                        if peer.prefix.peek(key) is None:
+                            break
+                        parent = key
+                        readopt += 1
+                req.n_registered = readopt
+                req.prefix_key = parent
+            elif self.prefix is not None and req.n_registered and no_wrap:
                 # ring wrap invalidates the leading-block <-> chain-key
                 # correspondence, so re-adoption only applies pre-wrap
                 readopt = req.n_registered
@@ -727,11 +752,14 @@ class MixerStateCache:
         if self.ssm is not None:
             self.ssm.register_snapshot(req)
 
-    def swap_out(self, req):
+    def swap_out(self, req, peer: "MixerStateCache | None" = None):
+        # ``peer`` = destination MixerStateCache for swap-to-peer
+        # migration: each family serializes against its counterpart's
+        # content index (see BlockKVCache/RecurrentSlotState.swap_out)
         if self.attn is not None and req.blocks:
-            self.attn.swap_out(req)
+            self.attn.swap_out(req, peer=peer.attn if peer else None)
         if self.ssm is not None and req.slot is not None:
-            self.ssm.swap_out(req)
+            self.ssm.swap_out(req, peer=peer.ssm if peer else None)
         self.swap_outs += 1
 
     def swap_in(self, req) -> bool | None:

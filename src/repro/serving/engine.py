@@ -126,6 +126,10 @@ class Engine:
         self.requests: dict[int, Request] = {}
         self.step_count = 0
         self._next_rid = 0
+        # set by ShardedEngine when this engine is one decode shard of
+        # a data-axis group; traces/stats then carry per-shard fields
+        self.shard: int | None = None
+        self.n_shards: int = 1
         self._step_rec: dict | None = None   # per-step trace assembly
         self._decoded = 0
         self._prefilled = 0
@@ -228,7 +232,8 @@ class Engine:
         self.tracer.meta(
             arch=self.cfg.name, accelerator=self.ecfg.accelerator,
             config=asdict(self.cfg), engine=asdict(self.ecfg),
-            spec_k=self._spec_k)
+            spec_k=self._spec_k, shard=self.shard,
+            n_shards=self.n_shards)
         return self.tracer
 
     def stop_trace(self):
@@ -237,7 +242,8 @@ class Engine:
 
     def submit(self, prompt, max_new: int, *, priority: int = 0,
                arrival_s: float = 0.0,
-               sampling: SamplingParams | None = None) -> int:
+               sampling: SamplingParams | None = None,
+               rid: int | None = None) -> int:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size + max_new > self.ecfg.max_model_len:
             raise ValueError(
@@ -247,8 +253,11 @@ class Engine:
             raise ValueError(
                 f"request needs {prompt.size + max_new} tokens of KV > "
                 f"the whole block pool; raise num_blocks")
-        rid = self._next_rid
-        self._next_rid += 1
+        if rid is None:
+            rid = self._next_rid
+        # keep local allocation clear of externally-assigned rids (the
+        # ShardedEngine owns a global rid space across its shards)
+        self._next_rid = max(self._next_rid, rid) + 1
         req = Request(rid, prompt, max_new, priority=priority,
                       arrival_s=arrival_s,
                       sampling=sampling or SamplingParams())
@@ -300,6 +309,8 @@ class Engine:
                   "kind": "+".join(
                       k for k in ("prefill", "decode", "spec_verify")
                       if k in rec) or "idle"}
+            if self.shard is not None:
+                ev["shard"] = self.shard
             ev.update(rec)
             if actions:
                 ev["actions"] = actions
@@ -320,6 +331,64 @@ class Engine:
                     f"defer/swap_lost reason per request: {detail}")
         return {rid: r.full_sequence() for rid, r in self.requests.items()
                 if r.state == State.FINISHED}
+
+    # ------------------------------------------- replay-curve feedback
+
+    def apply_replay_curve(self, curve: dict) -> int:
+        """Cap the speculative verify chunk at the modeled DWDM
+        pipeline-fill break-even of a replayed ``decode_batch_curve``
+        (serving/replay.py).  Beyond the break-even width, each extra
+        verified token costs more than a sequential decode step on the
+        modeled hardware, so drafting past it cannot win.  Lowers
+        ``spec_k`` (never raises it — the ring-rollback bound still
+        applies) and the scheduler's per-row decode budget charge.
+        Returns the spec_k now in effect."""
+        from repro.serving.replay import spec_chunk_cap
+        cap = spec_chunk_cap(curve)
+        if cap is not None and self._spec_k and cap - 1 < self._spec_k:
+            self._spec_k = max(cap - 1, 0)
+            self.scheduler.decode_cost = 1 + self._spec_k
+        return self._spec_k
+
+    # ------------------------------------------------- shard migration
+
+    def export_request(self, rid: int, peer: "Engine | None" = None):
+        """Detach a live request for migration to a peer shard.
+
+        A running request with computed state is serialized through the
+        content-hash swap path — against the PEER's indexes when one is
+        given, so blocks/snapshots the destination already holds by
+        hash never cross shards.  Queued and already-swapped requests
+        move as-is (their host buffers are portable; re-adoption depth
+        resolves against the destination at admission, degrading to
+        swap_lost recompute if its chains are missing).  Returns the
+        Request, no longer tracked by this engine."""
+        req = self.requests.pop(rid)
+        step = self.step_count
+        if req in self.scheduler.running:
+            self.scheduler.running.remove(req)
+            if req.pos > 0:
+                self.cache.swap_out(req, peer=peer.cache if peer else None)
+                req.park_swapped()
+            else:
+                self.cache.release(req)
+                req.reset_for_requeue()
+        elif req in self.scheduler.queue:
+            self.scheduler.queue.remove(req)
+        self.scheduler._ev(step, "migrate_out", req.rid, pos=req.pos,
+                           state=req.state.value)
+        return req
+
+    def adopt_request(self, req: Request, *, lost: bool = False):
+        """Take over a migrated request (counterpart of
+        ``export_request``).  ``lost=True`` = rescued from a dead shard
+        with its device state gone: reset for recompute-from-scratch
+        and surface the loss as ``swap_lost`` (scheduler.adopt)."""
+        if lost:
+            req.reset_for_requeue()
+        self.requests[req.rid] = req
+        self._next_rid = max(self._next_rid, req.rid + 1)
+        self.scheduler.adopt(req, self.step_count, lost=lost)
 
     # ------------------------------------------------------------ internals
 

@@ -418,13 +418,18 @@ class RecurrentSlotState(MixerState):
             self.allocator.free([req.slot])
             req.slot = None
 
-    def swap_out(self, req):
+    def swap_out(self, req, peer: "RecurrentSlotState | None" = None):
+        """Park req's slot state on the host — or, with ``peer``, decide
+        re-adoption against the PEER's snapshot index (swap-to-peer): if
+        the destination already holds the snapshot for the parked depth
+        by content hash, no state crosses shards at all."""
         with self.tracer.span("snapshot_out", rid=req.rid):
             bs = self.block_size
-            if (self.snapshots is not None and req.pos
+            index = self.snapshots if peer is None else peer.snapshots
+            if (index is not None and req.pos
                     and req.pos <= req.prompt_len and req.pos % bs == 0
                     and req.snap_registered == req.pos // bs
-                    and req.snap_key in self.snapshots):
+                    and req.snap_key in index):
                 # the parked state IS a snapshot still RESIDENT in the
                 # index: skip the D2H trip — swap_in re-adopts it by
                 # content hash.  (The membership check matters: for an

@@ -122,6 +122,7 @@ class TraceReplayer:
 
     def replay(self, records: list[dict]) -> dict:
         validate_trace(records)
+        meta = records[0] if records else {}
         by_kind: dict[str, _KindTotals] = {}
         max_rows = 1
         n_steps = 0
@@ -177,6 +178,10 @@ class TraceReplayer:
             "schema_version": REPLAY_SCHEMA_VERSION,
             "arch": self.cfg.name,
             "accelerator": self.acc.name,
+            # per-shard traces (ShardedEngine) carry their shard id in
+            # the meta record; single-engine traces report shard=None
+            "shard": meta.get("shard"),
+            "n_shards": meta.get("n_shards", 1),
             "steps": n_steps,
             "by_kind": {k: t.as_dict() for k, t in by_kind.items()},
             "analytic_s": analytic_s,
@@ -194,6 +199,37 @@ class TraceReplayer:
                                   if simulated_s else float("nan")),
             "decode_batch_curve": curve,
         }
+
+
+def spec_chunk_cap(curve: dict) -> int | None:
+    """Modeled DWDM pipeline-fill break-even of a ``decode_batch_curve``.
+
+    The simulated curve is sublinear: extra rows/positions ride the
+    same programmed MRR banks and share the pipeline fill, so the
+    MARGINAL cost of widening a batched pass starts far below the cost
+    of a separate single-token step — until the wavelength/OXG supply
+    saturates and each extra position costs as much as its own step.
+    The break-even is the widest point whose marginal step latency per
+    added token is still below the single-token step latency; a
+    speculative verify chunk wider than this cannot beat sequential
+    decode on the modeled hardware (``Engine.apply_replay_curve`` caps
+    ``spec_k`` with it).  None when the curve is empty or lacks the
+    batch-1 anchor."""
+    if not curve:
+        return None
+    pts = sorted((int(b), float(v["step_latency_s"]))
+                 for b, v in curve.items())
+    b0, t0 = pts[0]
+    if b0 != 1 or t0 <= 0:
+        return None
+    cap = 1
+    prev_b, prev_t = b0, t0
+    for b, t in pts[1:]:
+        marginal = (t - prev_t) / (b - prev_b)
+        if marginal >= t0:
+            break
+        cap, prev_b, prev_t = b, b, t
+    return cap
 
 
 def replay_trace(source, cfg=None, accelerator: str | None = None,

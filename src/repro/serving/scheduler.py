@@ -74,6 +74,10 @@ class Scheduler:
         self._order = 0
         self.preempts = 0        # evict + swap_out victims
         self.swap_losts = 0      # parked content evicted while swapped
+        # live copy of cfg.decode_cost: the engine lowers it when a
+        # replay cost curve caps the speculative verify chunk below the
+        # configured spec_k (see Engine.apply_replay_curve)
+        self.decode_cost = cfg.decode_cost
 
     # ------------------------------------------------------------- events
 
@@ -94,6 +98,27 @@ class Scheduler:
         self.queue.append(req)
         self._ev(step, "submit", req.rid, prompt_len=req.prompt_len,
                  max_new=req.max_new, priority=req.priority)
+
+    def adopt(self, req: Request, step: int, lost: bool = False):
+        """Take over a request migrated from a peer shard.
+
+        The request arrives QUEUED or SWAPPED (already serialized by
+        the source's ``swap_out``); it keeps its rid, sampling state,
+        and committed output, and only gets a fresh local ``_order``.
+        ``lost=True`` marks a request rescued from a dead shard whose
+        device state is gone: it was reset for recompute and the loss
+        is surfaced exactly like a host-swap chain eviction
+        (``swap_lost`` event + counter, visible in ``stall_reasons``).
+        """
+        req._order = self._order
+        self._order += 1
+        self.queue.append(req)
+        self._ev(step, "migrate_in", req.rid, pos=req.pos,
+                 state=req.state.value, preemptions=req.preemptions)
+        if lost:
+            self.swap_losts += 1
+            self._ev(step, "swap_lost", req.rid,
+                     preemptions=req.preemptions, reason="shard_lost")
 
     def _queue_order(self) -> list[Request]:
         if self.cfg.policy == "priority":
@@ -209,7 +234,7 @@ class Scheduler:
             # each decode row may burn decode_cost compute tokens this
             # step (speculative verify feeds spec_k+1 per row, not 1)
             budget = self.cfg.max_batched_tokens \
-                - len(plan.decode) * self.cfg.decode_cost
+                - len(plan.decode) * self.decode_cost
             req = prefilling[0]
             chunk = min(self.cfg.prefill_chunk, req.prompt_len - req.pos,
                         max(budget, 0))

@@ -1,0 +1,341 @@
+"""Data-axis sharded decode: N independent engine shards, one placement
+plane, fault-tolerant block migration.
+
+The decode batch is split across the data axis of the production mesh
+(``dist.sharding.shard_meshes``): every shard owns a full ``Engine`` —
+its own device, jit caches, ``MixerStateCache`` pools, block tables,
+and prefix/snapshot indexes — built and stepped under that shard's
+sharding context, so shards never contend on a pool and their step
+loops are exactly the single-engine datapath (the 1-shard configuration
+IS one plain Engine, <zero> semantic delta).  On top sits one
+placement plane:
+
+  * ``submit`` places each request on the alive shard with the least
+    committed-token load (``prompt + max_new`` KV footprint over every
+    unfinished request — the same budget the scheduler admits by), so
+    shards stay balanced without a global scheduler in the hot path;
+  * ``migrate`` moves a live request between shards by reusing the
+    content-hash swap serialization as SWAP-TO-PEER: the source
+    serializes against the DESTINATION's prefix/snapshot indexes
+    (``swap_out(peer=...)``), so blocks and snapshots the destination
+    already holds by hash never cross shards — only the tail is
+    copied, and the destination's ordinary ``swap_in`` re-adopts the
+    head locally at admission;
+  * ``kill_shard`` / ``reap`` fold in ``dist/fault.py``: a dead shard's
+    requests are rescued, not dropped.  FINISHED output already lives
+    host-side; SWAPPED requests carry portable host buffers and
+    re-admit on a survivor (hash chains the survivor lacks degrade to
+    the existing ``swap_lost`` recompute fallback); RUNNING requests
+    lose their device state and are requeued for recompute-from-scratch
+    with the loss surfaced exactly like a swap-chain eviction —
+    ``swap_lost`` in ``stall_reasons()`` and the trace.  Because
+    sampling keys are a pure function of (seed, position), every
+    rescued request finishes token-identically.
+
+Per-shard tracing/stats: each shard's tracer emits its own meta (with
+``shard``/``n_shards``, trace schema v2) and step records, and
+``stats()`` reports per-shard decode tokens/s next to the aggregate —
+each shard's rate over ITS OWN stepped wall time, which is what N
+hosts stepping concurrently would each sustain.
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+
+import jax
+import numpy as np
+
+from repro.dist import sharding as S
+from repro.dist.fault import HeartbeatMonitor
+from repro.layers import common as C
+from repro.serving.engine import Engine, EngineConfig, nearest_rank
+from repro.serving.request import State
+from repro.serving.sampling import SamplingParams
+
+
+class ShardedEngine:
+    """N decode shards over the data axis + one placement plane."""
+
+    def __init__(self, params, cfg, ecfg: EngineConfig, n_shards: int, *,
+                 meshes=None, rules: dict | None = None,
+                 dead_after: float = 60.0):
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.n_shards = n_shards
+        self.meshes = meshes if meshes is not None \
+            else S.shard_meshes(n_shards)
+        if len(self.meshes) != n_shards:
+            raise ValueError(f"{len(self.meshes)} meshes for "
+                             f"{n_shards} shards")
+        self.rules = rules if rules is not None else S.rules_decode(False)
+        self.devices = [m.devices.flat[0] for m in self.meshes]
+        self.engines: list[Engine] = []
+        for i in range(n_shards):
+            with self._on_shard_raw(i):
+                # params pinned per shard: committed inputs then keep
+                # every jit execution on that shard's device, and each
+                # Engine's per-instance jit closures give each shard
+                # its own compile cache
+                p_i = jax.device_put(params, self.devices[i])
+                eng = Engine(p_i, cfg, ecfg)
+            eng.shard = i
+            eng.n_shards = n_shards
+            self.engines.append(eng)
+        self.alive: list[int] = list(range(n_shards))
+        self.monitor = HeartbeatMonitor(n_shards, dead_after)
+        self.requests = {}           # global rid -> Request (survives
+        self.shard_of: dict[int, int] = {}   # its shard's death)
+        self._next_rid = 0
+        self.migrations = 0          # live-request moves between shards
+        self.requeued_lost = 0       # rescued with device state gone
+
+    # ----------------------------------------------------------- context
+
+    def _on_shard_raw(self, i: int):
+        stack = contextlib.ExitStack()
+        stack.enter_context(C.sharding_context(self.meshes[i], self.rules))
+        stack.enter_context(jax.default_device(self.devices[i]))
+        return stack
+
+    @contextlib.contextmanager
+    def _on_shard(self, i: int):
+        with self._on_shard_raw(i):
+            yield self.engines[i]
+
+    # --------------------------------------------------------- placement
+
+    def shard_load(self, i: int) -> int:
+        """Committed-token footprint: KV budget of every unfinished
+        request the shard owns (queued + running + swapped)."""
+        return sum(r.total_tokens for r in self.engines[i].requests.values()
+                   if r.state != State.FINISHED)
+
+    def _place(self, exclude: int | None = None) -> int:
+        cands = [i for i in self.alive if i != exclude]
+        if not cands:
+            raise RuntimeError("no alive shard to place on")
+        return min(cands, key=lambda i: (self.shard_load(i), i))
+
+    # --------------------------------------------------------------- API
+
+    def submit(self, prompt, max_new: int, *, shard: int | None = None,
+               priority: int = 0, arrival_s: float = 0.0,
+               sampling: SamplingParams | None = None) -> int:
+        """Place a request on the least-loaded alive shard (or a pinned
+        one) under a GLOBAL rid space."""
+        if shard is None:
+            shard = self._place()
+        elif shard not in self.alive:
+            raise ValueError(f"shard {shard} is not alive")
+        rid = self._next_rid
+        self._next_rid += 1
+        with self._on_shard(shard) as eng:
+            eng.submit(prompt, max_new, priority=priority,
+                       arrival_s=arrival_s, sampling=sampling, rid=rid)
+        self.requests[rid] = eng.requests[rid]
+        self.shard_of[rid] = shard
+        return rid
+
+    def step(self) -> bool:
+        """One iteration of every alive, non-idle shard (simulated
+        concurrency: per-shard wall time is tracked by each shard's own
+        tracer, so per-host rates stay honest)."""
+        progressed = False
+        for i in self.alive:
+            eng = self.engines[i]
+            if eng.scheduler.idle:
+                continue
+            t0 = time.perf_counter()
+            with self._on_shard(i):
+                progressed = eng.step() or progressed
+            self.monitor.beat(i, time.monotonic(),
+                              time.perf_counter() - t0)
+        return progressed
+
+    @property
+    def idle(self) -> bool:
+        return all(self.engines[i].scheduler.idle for i in self.alive)
+
+    def stall_reasons(self) -> dict[int, tuple[str, str]]:
+        merged: dict[int, tuple[str, str]] = {}
+        for i in self.alive:
+            merged.update(self.engines[i].scheduler.stall_reasons())
+        return merged
+
+    def run(self) -> dict[int, np.ndarray]:
+        """Drive every alive shard until drained; returns rid -> full
+        token sequence for every finished request — including requests
+        that finished on a shard that has since died (their output is
+        host-side) and requests rescued FROM a dead shard."""
+        while not self.idle:
+            if not self.step():
+                stalls = self.stall_reasons()
+                detail = "; ".join(
+                    f"rid={rid}[{state}]: {why}"
+                    for rid, (state, why) in sorted(stalls.items()))
+                raise RuntimeError(
+                    "sharded engine stalled — last defer/swap_lost "
+                    f"reason per request: {detail}")
+        return {rid: r.full_sequence() for rid, r in self.requests.items()
+                if r.state == State.FINISHED}
+
+    # --------------------------------------------------------- migration
+
+    def migrate(self, rid: int, dst: int | None = None) -> int:
+        """Move a live request to ``dst`` (default: least-loaded other
+        alive shard) via swap-to-peer; returns the destination."""
+        src = self.shard_of[rid]
+        req = self.requests[rid]
+        if req.state == State.FINISHED:
+            raise ValueError(f"rid={rid} already finished")
+        if dst is None:
+            dst = self._place(exclude=src)
+        if dst not in self.alive:
+            raise ValueError(f"shard {dst} is not alive")
+        if dst == src:
+            return dst
+        dst_eng = self.engines[dst]
+        with self._on_shard(src) as eng:
+            req = eng.export_request(rid, peer=dst_eng)
+        with self._on_shard(dst):
+            dst_eng.adopt_request(req)
+        self.shard_of[rid] = dst
+        self.migrations += 1
+        return dst
+
+    def rebalance(self, max_moves: int = 1) -> int:
+        """Move up to ``max_moves`` QUEUED requests from the most- to
+        the least-loaded shard when the gap exceeds one request's
+        footprint.  Queued-only: moving waiting work is free (no state
+        crosses shards), which keeps a burst submitted to one shard
+        from serializing behind it."""
+        moved = 0
+        for _ in range(max_moves):
+            if len(self.alive) < 2:
+                break
+            hi = max(self.alive, key=self.shard_load)
+            lo = min(self.alive, key=lambda i: (self.shard_load(i), i))
+            queued = [r for r in self.engines[hi].scheduler.queue
+                      if r.state == State.QUEUED]
+            if hi == lo or not queued:
+                break
+            victim = max(queued, key=lambda r: r._order)   # youngest
+            if self.shard_load(hi) - self.shard_load(lo) \
+                    < victim.total_tokens:
+                break
+            self.migrate(victim.rid, lo)
+            moved += 1
+        return moved
+
+    # ------------------------------------------------------------- fault
+
+    def kill_shard(self, i: int):
+        """Simulate losing decode shard ``i``: its device state is
+        unreachable, but no request is dropped — see module docstring
+        for the per-state rescue semantics."""
+        if i not in self.alive:
+            raise ValueError(f"shard {i} is not alive")
+        self.alive.remove(i)
+        if not self.alive:
+            raise RuntimeError("last shard killed — nothing to rescue onto")
+        eng = self.engines[i]
+        for rid, req in list(eng.requests.items()):
+            if req.state == State.FINISHED:
+                continue             # output already committed host-side
+            dst = self._place()
+            # SWAPPED state lives in host buffers and re-admits on the
+            # survivor (missing hash chains degrade to swap_lost
+            # recompute inside _admit); anything still on the dead
+            # device is recomputed from scratch
+            lost = req.state != State.SWAPPED
+            with self._on_shard(dst) as de:
+                de.adopt_request(req, lost=lost)
+            self.shard_of[rid] = dst
+            if lost:
+                self.requeued_lost += 1
+        eng.requests.clear()
+        eng.scheduler.queue.clear()
+        eng.scheduler.running.clear()
+
+    def reap(self, now: float | None = None) -> list[int]:
+        """Kill every shard the heartbeat monitor declares dead."""
+        now = time.monotonic() if now is None else now
+        dead = [h for h in self.monitor.dead_hosts(now) if h in self.alive]
+        for h in dead:
+            self.kill_shard(h)
+        return dead
+
+    # ----------------------------------------------------------- tracing
+
+    def start_trace(self, prefix: str | None = None, *, ring: int = 4096,
+                    capture_logits: bool = False):
+        """Per-shard traces: ``{prefix}.shard{i}.jsonl`` each with its
+        own schema-v2 meta record carrying the shard id."""
+        out = []
+        for i, eng in enumerate(self.engines):
+            path = f"{prefix}.shard{i}.jsonl" if prefix else None
+            out.append(eng.start_trace(path, ring=ring,
+                                       capture_logits=capture_logits))
+        return out
+
+    def stop_trace(self):
+        for eng in self.engines:
+            eng.stop_trace()
+
+    # ------------------------------------------------------------- stats
+
+    def reset_stats(self, *, flush_prefix: bool = False):
+        for eng in self.engines:
+            eng.reset_stats(flush_prefix=flush_prefix)
+
+    def apply_replay_curve(self, curve: dict) -> int:
+        """Propagate the modeled verify-chunk break-even to every
+        shard's scheduler (see Engine.apply_replay_curve)."""
+        k = 0
+        for eng in self.engines:
+            k = eng.apply_replay_curve(curve)
+        return k
+
+    def stats(self) -> dict:
+        per_shard = []
+        agg_rate = 0.0
+        for i, eng in enumerate(self.engines):
+            wall = eng.tracer.span_total("step")
+            # decode rate over the shard's OWN stepped wall time: N
+            # hosts step concurrently, so the fleet rate is the sum of
+            # per-host rates, not tokens over the summed walls
+            rate = eng._decoded / wall if wall else 0.0
+            per_shard.append({
+                "shard": i,
+                "alive": i in self.alive,
+                "finished": sum(1 for r in eng.requests.values()
+                                if r.state == State.FINISHED),
+                "decoded_tokens": eng._decoded,
+                "prefill_tokens": eng._prefilled,
+                "wall_s": wall,
+                "decode_tokens_per_s": rate,
+                "swap_losts": eng.scheduler.swap_losts,
+                "preemptions": eng.scheduler.preempts,
+            })
+            if i in self.alive or eng._decoded:
+                agg_rate += rate
+        finished = [r for r in self.requests.values()
+                    if r.state == State.FINISHED]
+        lat = sorted(r.finish_s - r.submit_s for r in finished
+                     if r.finish_s is not None and r.submit_s is not None)
+        return {
+            "n_shards": self.n_shards,
+            "alive_shards": list(self.alive),
+            "finished": len(finished),
+            "decoded_tokens": sum(p["decoded_tokens"] for p in per_shard),
+            "prefill_tokens": sum(p["prefill_tokens"] for p in per_shard),
+            "aggregate_decode_tokens_per_s": agg_rate,
+            "p50_latency_s": nearest_rank(lat, 50),
+            "p99_latency_s": nearest_rank(lat, 99),
+            "migrations": self.migrations,
+            "requeued_lost": self.requeued_lost,
+            "per_shard": per_shard,
+        }

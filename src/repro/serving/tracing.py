@@ -41,7 +41,10 @@ import json
 import time
 from collections import deque
 
-TRACE_SCHEMA_VERSION = 1
+# v2: meta carries ``shard``/``n_shards`` and step records carry a
+# ``shard`` field when the engine runs as one shard of a ShardedEngine
+# (see serving/sharded.py); single-engine traces emit shard=None.
+TRACE_SCHEMA_VERSION = 2
 
 # record types a valid trace may contain (schema checks + exporter)
 RECORD_TYPES = ("meta", "step", "request", "span")

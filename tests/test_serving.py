@@ -171,11 +171,13 @@ def test_engine_matches_legacy_serve_greedy():
 @pytest.mark.slow  # serve() end-to-end per arch; engine-level family
 # differentials run fast in tests/test_prefix_swap.py
 @pytest.mark.parametrize("arch", ["mamba2-1.3b", "deepseek-v2-lite-16b",
-                                  "mixtral-8x7b"])
+                                  "mixtral-8x7b", "jamba-1.5-large-398b"])
 def test_serve_paged_matches_legacy_all_families(arch):
     """Acceptance: launch/serve.py --engine paged runs every mixer
     family (smoke shapes) with no legacy fallback, greedy tokens
-    identical to the legacy oracle."""
+    identical to the legacy oracle.  Jamba rides along since the MoE
+    capacity-drop divergence was fixed (drop-free inference dispatch,
+    layers/moe.py)."""
     from repro.launch.serve import serve
     kw = dict(smoke=True, batch=2, prompt_len=5, gen=5, precision="bnn")
     got = serve(arch, engine="paged", verbose=False, **kw)

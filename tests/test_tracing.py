@@ -282,13 +282,13 @@ def test_bench_json_schema_gate(tmp_path):
     assert check_bench_json(bad_path)
 
 
-# ------------------------------------- jamba hybrid differential (bug)
+# ------------------------------------- jamba hybrid differential
 
 @pytest.mark.slow  # jamba hybrid compile
 def test_jamba_paged_matches_legacy_engine_level(jamba_models):
-    """The hybrid family's missing engine-level differential: paged
-    engine vs the dense-slot legacy oracle, token-identical (no mesh
-    context — contrast with the pinned serve-level divergence below)."""
+    """The hybrid family's engine-level differential: paged engine vs
+    the dense-slot legacy oracle, token-identical (no mesh context —
+    the serve-level pair below covers the mesh path)."""
     from test_prefix_swap import legacy_greedy
     cfg, params = jamba_models
     rng = np.random.default_rng(0)
@@ -302,21 +302,18 @@ def test_jamba_paged_matches_legacy_engine_level(jamba_models):
 
 
 @pytest.mark.slow  # two serve() runs end-to-end
-@pytest.mark.xfail(strict=True, reason=(
-    "known pre-existing divergence (ROADMAP): jamba hybrid paged vs "
-    "legacy under serve()'s mesh context diverges at batch 2, "
-    "prompt 5 / gen 5 — numeric tie-flip, logit dump in the trace"))
 def test_jamba_serve_paged_matches_legacy(tmp_path):
-    """Pins the known bug: when this xpasses, the divergence is fixed —
-    delete the xfail marker and fold jamba into
-    test_serve_paged_matches_legacy_all_families."""
+    """Regression for the once-pinned serve()-level divergence: jamba
+    hybrid paged vs legacy at batch 2, prompt 5 / gen 5.  Root cause
+    was never the mesh — the MoE layer's finite expert capacity
+    dropped a real token at padded prefill-chunk widths 5-7 (see
+    layers/moe.py: inference now dispatches drop-free).  The logit
+    capture that located it stays exercised here."""
     from repro.launch.serve import serve
     kw = dict(smoke=True, batch=2, prompt_len=5, gen=5, precision="bnn")
     trace_path = str(tmp_path / "jamba_logits.jsonl")
     got = serve("jamba-1.5-large-398b", engine="paged", verbose=False,
                 trace=trace_path, capture_logits=True, **kw)
-    # the logit-level dump the ROADMAP bug report asks for is now on
-    # disk: per-step prefill/decode logits for the diverging run
     dumped = [r for r in read_trace(trace_path) if r["type"] == "step"]
     assert any("logits" in r.get("decode", {}) for r in dumped)
     want = serve("jamba-1.5-large-398b", engine="legacy", **kw)
