@@ -105,6 +105,7 @@ def serve(arch: str, *, smoke: bool = False, multi_pod: bool = False,
           temperature: float = 0.0, top_k: int = 0, top_p: float = 1.0,
           sampling_seed: int = 0, stop: tuple[int, ...] = (),
           spec_k: int = 0, spec_ngram: int = 3,
+          attn_impl: str = "auto", bnn_impl: str = "auto",
           trace: str | None = None, replay_photonic: bool = False,
           capture_logits: bool = False, shards: int = 1):
     """Serve ``batch`` synthetic requests; returns (batch, prompt+gen)
@@ -131,7 +132,8 @@ def serve(arch: str, *, smoke: bool = False, multi_pod: bool = False,
             prefix_cache=prefix_cache,
             preempt_policy=preempt_policy,
             snapshot_slots=snapshot_slots,
-            spec_k=spec_k, spec_ngram=spec_ngram)
+            spec_k=spec_k, spec_ngram=spec_ngram,
+            attn_impl=attn_impl, bnn_impl=bnn_impl)
         if shards > 1:
             from repro.serving import ShardedEngine
             eng = ShardedEngine(
@@ -268,6 +270,14 @@ def main():
                     help="stop/eos token id (repeatable)")
     ap.add_argument("--spec-k", type=int, default=0,
                     help="speculative draft length (0 = off)")
+    ap.add_argument("--attn-impl", default="auto",
+                    choices=["auto", "pallas", "xla"],
+                    help="paged-attention kernel: fused Pallas, XLA "
+                         "oracle, or auto (pallas on TPU)")
+    ap.add_argument("--bnn-impl", default="auto",
+                    choices=["auto", "pallas", "xla"],
+                    help="packed BNN GEMM: fused Pallas chain, XLA "
+                         "oracle, or auto (pallas on TPU)")
     ap.add_argument("--spec-ngram", type=int, default=3,
                     help="max n-gram for prompt-lookup drafting")
     ap.add_argument("--trace", default=None, metavar="PATH",
@@ -293,6 +303,7 @@ def main():
           top_k=args.top_k, top_p=args.top_p,
           sampling_seed=args.sampling_seed, stop=tuple(args.stop_token),
           spec_k=args.spec_k, spec_ngram=args.spec_ngram,
+          attn_impl=args.attn_impl, bnn_impl=args.bnn_impl,
           trace=args.trace, replay_photonic=args.replay_photonic,
           shards=args.shards)
 

@@ -104,7 +104,11 @@ def attention(q: Array, k: Array, v: Array, *,
     eff_len = kv_len if kv_len is not None else s
     q_off = jnp.broadcast_to(jnp.asarray(q_offset), (b,))
     if k_positions is None:
-        kpos_full = jnp.broadcast_to(jnp.arange(sp, dtype=jnp.int32)[None],
+        # padded slots (>= s) get position -1, not arange: a padded
+        # zero-K slot must never pass the masks, even when kv_len
+        # overshoots the real S
+        ar = jnp.arange(sp, dtype=jnp.int32)
+        kpos_full = jnp.broadcast_to(jnp.where(ar < s, ar, -1)[None],
                                      (b, sp))
     else:
         kpos_full = jnp.pad(k_positions.astype(jnp.int32),
@@ -176,5 +180,9 @@ def attention_reference(q, k, v, *, causal=True, window=None, q_offset=0,
         mask &= k_pos[:, None, :] < kl[:, None, None]
     scores = jnp.where(mask[:, None], scores, NEG_INF)
     p = jax.nn.softmax(scores, axis=-1)
+    # fully-masked rows: softmax of all-NEG_INF is uniform — zero it to
+    # match the flash path (which emits 0 when nothing is attendable)
+    any_valid = jnp.any(mask, axis=-1)                  # (B, T)
+    p = jnp.where(any_valid[:, None, :, None], p, 0.0)
     out = jnp.einsum("bhts,bshd->bthd", p, vf)
     return out.astype(q.dtype)

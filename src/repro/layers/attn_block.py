@@ -5,6 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import paged_attention as pa
 from repro.layers import attention as attn_mod
 from repro.layers import common as C
 
@@ -137,19 +138,44 @@ def ring_key_positions(newest: Array, mb: int, bs: int) -> Array:
     return newest[:, None] - ((newest[:, None] - s[None, :]) % r)
 
 
+def _paged_attend(cfg, q, cache, block_table, lengths, kv_len, newest,
+                  ring, causal, impl):
+    """GQA paged attention with impl dispatch: the fused Pallas kernel
+    walks the block table in-kernel; the XLA path (gather_blocks + the
+    chunked flash core) is the differential oracle."""
+    mb = block_table.shape[1]
+    bs = cache["k"].shape[1]
+    if pa.resolve_impl(impl) == "pallas":
+        return pa.paged_attention(
+            q, cache["k"], cache["v"], block_table, kv_len=kv_len,
+            q_offset=lengths, layout="gqa", causal=causal,
+            window=cfg.sliding_window, ring=ring,
+            newest=newest if ring else None)
+    keys = gather_blocks(cache["k"], block_table)
+    vals = gather_blocks(cache["v"], block_table)
+    kpos = ring_key_positions(newest, mb, bs) if ring else None
+    return attn_mod.attention(q, keys.astype(q.dtype), vals.astype(q.dtype),
+                              causal=causal, kv_len=kv_len,
+                              window=cfg.sliding_window, q_offset=lengths,
+                              k_positions=kpos,
+                              q_chunk=min(cfg.q_chunk, q.shape[1]),
+                              kv_chunk=cfg.kv_chunk)
+
+
 def paged_decode_step(params, cfg, x: Array, cache, block_table: Array,
                       lengths: Array, *, precision: str = "bf16",
                       active: Array | None = None,
-                      ring: bool = False) -> tuple[Array, dict]:
+                      ring: bool = False,
+                      attn_impl: str = "auto") -> tuple[Array, dict]:
     """One-token decode against the paged pool with PER-ROW lengths.
 
     x (B, 1, d); block_table (B, max_blocks); lengths (B,) current
     per-sequence cache fill; active (B,) bool masks padded batch slots;
-    ring=True treats the table as a sliding-window ring buffer.
+    ring=True treats the table as a sliding-window ring buffer;
+    attn_impl selects the fused Pallas kernel or the XLA oracle
+    (kernels/paged_attention.resolve_impl).
     """
     b = x.shape[0]
-    mb = block_table.shape[1]
-    bs = cache["k"].shape[1]
     positions = lengths[:, None]                                 # (B, 1)
     q, k, v = _qkv(params, cfg, x, positions, precision)
     valid = (jnp.ones((b, 1), bool) if active is None
@@ -160,14 +186,8 @@ def paged_decode_step(params, cfg, x: Array, cache, block_table: Array,
         "v": scatter_blocks(cache["v"], block_table, positions, v, valid,
                             ring=ring),
     }
-    keys = gather_blocks(cache["k"], block_table)
-    vals = gather_blocks(cache["v"], block_table)
-    kpos = ring_key_positions(lengths, mb, bs) if ring else None
-    o = attn_mod.attention(q, keys.astype(q.dtype), vals.astype(q.dtype),
-                           causal=False, kv_len=lengths + 1,
-                           window=cfg.sliding_window, q_offset=lengths,
-                           k_positions=kpos,
-                           q_chunk=1, kv_chunk=cfg.kv_chunk)
+    o = _paged_attend(cfg, q, cache, block_table, lengths, lengths + 1,
+                      lengths, ring, causal=False, impl=attn_impl)
     o = o.reshape(b, 1, cfg.n_heads * cfg.head_dim)
     return C.dense(o, params["o"], precision), cache
 
@@ -175,7 +195,8 @@ def paged_decode_step(params, cfg, x: Array, cache, block_table: Array,
 def prefill_chunk(params, cfg, x: Array, cache, block_table: Array,
                   lengths: Array, n_valid: Array, *,
                   precision: str = "bf16",
-                  ring: bool = False) -> tuple[Array, dict]:
+                  ring: bool = False,
+                  attn_impl: str = "auto") -> tuple[Array, dict]:
     """Chunked prefill: C tokens per row appended at per-row offsets.
 
     x (B, C, d); lengths (B,) tokens already cached; n_valid (B,) how
@@ -192,8 +213,6 @@ def prefill_chunk(params, cfg, x: Array, cache, block_table: Array,
     ring was sized for).
     """
     b, ch, _ = x.shape
-    mb = block_table.shape[1]
-    bs = cache["k"].shape[1]
     positions = lengths[:, None] + jnp.arange(ch, dtype=jnp.int32)[None, :]
     q, k, v = _qkv(params, cfg, x, positions, precision)
     valid = jnp.arange(ch, dtype=jnp.int32)[None, :] < n_valid[:, None]
@@ -203,15 +222,9 @@ def prefill_chunk(params, cfg, x: Array, cache, block_table: Array,
         "v": scatter_blocks(cache["v"], block_table, positions, v, valid,
                             ring=ring),
     }
-    keys = gather_blocks(cache["k"], block_table)
-    vals = gather_blocks(cache["v"], block_table)
-    kpos = (ring_key_positions(lengths + n_valid - 1, mb, bs)
-            if ring else None)
-    o = attn_mod.attention(q, keys.astype(q.dtype), vals.astype(q.dtype),
-                           causal=True, q_offset=lengths,
-                           kv_len=lengths + n_valid,
-                           window=cfg.sliding_window, k_positions=kpos,
-                           q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    o = _paged_attend(cfg, q, cache, block_table, lengths,
+                      lengths + n_valid, lengths + n_valid - 1,
+                      ring, causal=True, impl=attn_impl)
     o = o.reshape(b, ch, cfg.n_heads * cfg.head_dim)
     return C.dense(o, params["o"], precision), cache
 

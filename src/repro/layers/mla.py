@@ -117,9 +117,21 @@ def init_paged_state(cfg, num_blocks: int, block_size: int,
 
 
 def _paged_attend(params, cfg, q, cache, block_table, lengths, kv_len,
-                  newest, ring, causal):
+                  newest, ring, causal, impl="auto"):
+    from repro.kernels import paged_attention as pa
     from repro.layers import attn_block  # local: avoid import cycle
 
+    if pa.resolve_impl(impl) == "pallas":
+        # fused kernel: gather the COMPRESSED latents per block table
+        # entry and decompress per-head K/V in-kernel (k_up/v_up stay
+        # resident in VMEM across the walk)
+        return pa.paged_attention(
+            q, cache["c_kv"], cache["k_rope"], block_table,
+            kv_len=kv_len, q_offset=lengths, layout="mla",
+            causal=causal, window=cfg.sliding_window, ring=ring,
+            newest=newest if ring else None,
+            k_up=params["k_up"]["w"], v_up=params["v_up"]["w"],
+            nope_dim=cfg.qk_nope_head_dim)
     lat = attn_block.gather_blocks(cache["c_kv"], block_table)
     rop = attn_block.gather_blocks(cache["k_rope"], block_table)
     k, v = _expand_kv(params, cfg, lat.astype(q.dtype), rop.astype(q.dtype))
@@ -135,7 +147,8 @@ def _paged_attend(params, cfg, q, cache, block_table, lengths, kv_len,
 def paged_decode_step(params, cfg, x: Array, cache, block_table: Array,
                       lengths: Array, *, precision: str = "bf16",
                       active: Array | None = None,
-                      ring: bool = False) -> tuple[Array, dict]:
+                      ring: bool = False,
+                      attn_impl: str = "auto") -> tuple[Array, dict]:
     """One-token decode against the paged latent pool, per-row lengths."""
     from repro.layers import attn_block
 
@@ -154,7 +167,8 @@ def paged_decode_step(params, cfg, x: Array, cache, block_table: Array,
     }
     q = jnp.concatenate([q_nope, q_rope], axis=-1)
     o = _paged_attend(params, cfg, q, cache, block_table, lengths,
-                      lengths + 1, lengths, ring, causal=False)
+                      lengths + 1, lengths, ring, causal=False,
+                      impl=attn_impl)
     o = o.reshape(b, 1, cfg.n_heads * cfg.v_head_dim)
     return C.dense(o, params["o"], precision), cache
 
@@ -162,7 +176,8 @@ def paged_decode_step(params, cfg, x: Array, cache, block_table: Array,
 def prefill_chunk(params, cfg, x: Array, cache, block_table: Array,
                   lengths: Array, n_valid: Array, *,
                   precision: str = "bf16",
-                  ring: bool = False) -> tuple[Array, dict]:
+                  ring: bool = False,
+                  attn_impl: str = "auto") -> tuple[Array, dict]:
     """Chunked prefill of C latent tokens per row at per-row offsets.
 
     Doubles as the speculative VERIFY entry point (the per-head K/V a
@@ -187,7 +202,7 @@ def prefill_chunk(params, cfg, x: Array, cache, block_table: Array,
     q = jnp.concatenate([q_nope, q_rope], axis=-1)
     o = _paged_attend(params, cfg, q, cache, block_table, lengths,
                       lengths + n_valid, lengths + n_valid - 1,
-                      ring, causal=True)
+                      ring, causal=True, impl=attn_impl)
     o = o.reshape(b, ch, cfg.n_heads * cfg.v_head_dim)
     return C.dense(o, params["o"], precision), cache
 

@@ -446,7 +446,8 @@ def _paged_ffn(params, cfg: ArchConfig, f: str, x, precision):
 def paged_decode_step(params, cfg: ArchConfig, tokens: Array, caches,
                       block_table: Array, lengths: Array,
                       active: Array | None = None,
-                      slots: Array | None = None, *, ring: bool = False):
+                      slots: Array | None = None, *, ring: bool = False,
+                      attn_impl: str = "auto"):
     """One decode token per row against the paged mixer-state pools.
 
     tokens (B, 1) int32; block_table (B, max_blocks); lengths (B,)
@@ -464,11 +465,13 @@ def paged_decode_step(params, cfg: ArchConfig, tokens: Array, caches,
         if mix == "gqa":
             y, nc = attn_block.paged_decode_step(
                 p["attn"], cfg, h, caches[li], block_table, lengths,
-                precision=cfg.precision, active=active, ring=ring)
+                precision=cfg.precision, active=active, ring=ring,
+                attn_impl=attn_impl)
         elif mix == "mla":
             y, nc = mla.paged_decode_step(
                 p["attn"], cfg, h, caches[li], block_table, lengths,
-                precision=cfg.precision, active=active, ring=ring)
+                precision=cfg.precision, active=active, ring=ring,
+                attn_impl=attn_impl)
         else:
             y, nc = mamba2.paged_decode_step(
                 p["attn"], cfg, h, caches[li], slots,
@@ -482,7 +485,8 @@ def paged_decode_step(params, cfg: ArchConfig, tokens: Array, caches,
 
 def prefill_chunk(params, cfg: ArchConfig, tokens: Array, caches,
                   block_table: Array, lengths: Array, n_valid: Array,
-                  slots: Array | None = None, *, ring: bool = False):
+                  slots: Array | None = None, *, ring: bool = False,
+                  attn_impl: str = "auto"):
     """Jitted chunked prefill: append a chunk of C tokens per row.
 
     tokens (B, C) int32 (padded past n_valid); lengths (B,) tokens
@@ -501,11 +505,13 @@ def prefill_chunk(params, cfg: ArchConfig, tokens: Array, caches,
         if mix == "gqa":
             y, nc = attn_block.prefill_chunk(
                 p["attn"], cfg, h, caches[li], block_table, lengths,
-                n_valid, precision=cfg.precision, ring=ring)
+                n_valid, precision=cfg.precision, ring=ring,
+                attn_impl=attn_impl)
         elif mix == "mla":
             y, nc = mla.prefill_chunk(
                 p["attn"], cfg, h, caches[li], block_table, lengths,
-                n_valid, precision=cfg.precision, ring=ring)
+                n_valid, precision=cfg.precision, ring=ring,
+                attn_impl=attn_impl)
         else:
             y, nc = mamba2.prefill_chunk(
                 p["attn"], cfg, h, caches[li], slots, n_valid,
@@ -537,7 +543,8 @@ def restore_slot_state(cfg: ArchConfig, caches, slots: Array, snaps: list):
 
 def spec_verify(params, cfg: ArchConfig, tokens: Array, caches,
                 block_table: Array, lengths: Array, n_valid: Array,
-                slots: Array | None = None, *, ring: bool = False):
+                slots: Array | None = None, *, ring: bool = False,
+                attn_impl: str = "auto"):
     """Multi-token speculative verify: one prefill-shaped forward over
     ``[last_token, draft...]`` rows scores every draft position at once.
 
@@ -551,7 +558,8 @@ def spec_verify(params, cfg: ArchConfig, tokens: Array, caches,
     """
     snaps = snapshot_slot_state(cfg, caches, slots)
     logits, caches = prefill_chunk(params, cfg, tokens, caches, block_table,
-                                   lengths, n_valid, slots, ring=ring)
+                                   lengths, n_valid, slots, ring=ring,
+                                   attn_impl=attn_impl)
     return logits, caches, snaps
 
 

@@ -18,10 +18,12 @@ single-token latency.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 
 from repro.models.transformer import layer_plan
 from repro.photonic import accelerators
+from repro.photonic import params as P
 from repro.photonic.simulator import SimKnobs, simulate_layer
 from repro.photonic.workloads import LayerSpec, fc
 
@@ -99,21 +101,36 @@ class PhotonicCostModel:
     """Per-layer latencies for one arch on one accelerator config."""
 
     def __init__(self, cfg, accelerator: str = "OXBNN_50",
-                 knobs: SimKnobs = SimKnobs()):
+                 knobs: SimKnobs = SimKnobs(), *, fused_bnn: bool = True):
         self.cfg = cfg
         self.acc = accelerators.by_name(accelerator)
         self.knobs = knobs
+        self.fused_bnn = fused_bnn
+        self.specs = gemm_specs(cfg)
         self.layers = [simulate_layer(self.acc, s, knobs)
-                       for s in gemm_specs(cfg)]
+                       for s in self.specs]
+        # Fused chain (kernels/fused_bnn.py): the PCA comparator output
+        # feeds the next layer's OXG operand drive directly, so packed
+        # activations never round-trip through eDRAM between GEMMs.
+        # Unfused, every GEMM's S-bit operand is written back and read
+        # again — one store + one load of ceil(S/32) words through the
+        # IO interface, each paying the eDRAM access latency.
+        io_rate = knobs.io_words_per_cycle_per_tile * self.acc.num_tiles
+        self.pack_pass_s_per_token = 0.0 if fused_bnn else sum(
+            2 * math.ceil(math.ceil(s.s / 32) / io_rate) * P.EDRAM.latency_s
+            for s in self.specs)
 
     @property
     def token_cost(self) -> TokenCost:
-        lat = sum(l.latency_s for l in self.layers)
+        lat = (sum(l.latency_s for l in self.layers)
+               + self.pack_pass_s_per_token)
         en = sum(l.energy_j for l in self.layers)
         by_stage: dict[str, float] = {}
         for l in self.layers:
             for s in l.stages:
                 by_stage[s.name] = by_stage.get(s.name, 0.0) + s.time_s
+        if self.pack_pass_s_per_token:
+            by_stage["pack"] = self.pack_pass_s_per_token
         return TokenCost(lat, en, max(by_stage, key=by_stage.get))
 
     @property
@@ -134,8 +151,12 @@ class PhotonicCostModel:
     def pipeline_interval_s(self) -> float:
         """Summed per-layer bottleneck-stage time: the marginal cost of
         streaming ONE MORE token through the weight-stationary XPC/PCA
-        pipeline (every layer's fills are already paid)."""
-        return sum(max(s.time_s for s in l.stages) for l in self.layers)
+        pipeline (every layer's fills are already paid).  The unfused
+        pack round-trip is serial with the stream — each extra token's
+        packed activations still traverse eDRAM — so it rides the
+        marginal interval, not the one-time fill."""
+        return (sum(max(s.time_s for s in l.stages) for l in self.layers)
+                + self.pack_pass_s_per_token)
 
     @property
     def fill_s(self) -> float:
@@ -233,4 +254,6 @@ class PhotonicCostModel:
             "token_energy_j": tc.energy_j,
             "bottleneck_stage": tc.bottleneck,
             "n_gemms": len(self.layers),
+            "fused_bnn": self.fused_bnn,
+            "pack_pass_s_per_token": self.pack_pass_s_per_token,
         }

@@ -46,6 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import ops as kops
 from repro.models import transformer as M
 from repro.serving.block_cache import MixerStateCache
 from repro.serving.cost_model import PhotonicCostModel
@@ -87,6 +88,8 @@ class EngineConfig:
                                      # prefix_cache like the block index)
     spec_k: int = 0                  # speculative draft length (0 = off)
     spec_ngram: int = 3              # max n-gram for prompt-lookup drafts
+    attn_impl: str = "auto"          # paged attention: pallas | xla | auto
+    bnn_impl: str = "auto"           # packed BNN GEMM: pallas | xla | auto
 
 
 class Engine:
@@ -122,7 +125,11 @@ class Engine:
                             preempt_policy=ecfg.preempt_policy,
                             decode_cost=1 + self._spec_k),
             self.cache, tracer=self.tracer)
-        self.cost_model = PhotonicCostModel(cfg, ecfg.accelerator)
+        # the fused Pallas chain never spills packed activations to
+        # HBM; the XLA oracle prices the extra pack pass per GEMM
+        self.cost_model = PhotonicCostModel(
+            cfg, ecfg.accelerator,
+            fused_bnn=kops.resolve_impl(ecfg.bnn_impl) == "pallas")
         self.requests: dict[int, Request] = {}
         self.step_count = 0
         self._next_rid = 0
@@ -150,12 +157,29 @@ class Engine:
 
         cfg_ = cfg  # closure constants (static); params/pools stay args
         ring_ = self.cache.ring_blocks > 0
+        attn_impl_ = ecfg.attn_impl
+
+        def _pin_bnn(fn):
+            # the BNN impl is resolved at TRACE time inside bnn_dense;
+            # pinning the module default around the traced body bakes
+            # the engine's choice into the jitted graph without
+            # threading an impl kwarg through every layer signature
+            if ecfg.bnn_impl == "auto":
+                return fn
+
+            def wrapped(*a, **kw):
+                prev = kops.set_default_impl(ecfg.bnn_impl)
+                try:
+                    return fn(*a, **kw)
+                finally:
+                    kops.set_default_impl(prev)
+            return wrapped
 
         def _prefill(params, pools, tokens, table, lengths, n_valid, slots,
                      seeds, temps, top_k, top_p):
             logits, pools = M.prefill_chunk(params, cfg_, tokens, pools,
                                             table, lengths, n_valid, slots,
-                                            ring=ring_)
+                                            ring=ring_, attn_impl=attn_impl_)
             # chunk-final logits row -> the would-be next token (used by
             # the engine only when this chunk completes the prompt)
             gather = jnp.maximum(n_valid - 1, 0)[:, None, None]
@@ -171,13 +195,14 @@ class Engine:
                     seeds, temps, top_k, top_p):
             logits, pools = M.paged_decode_step(params, cfg_, tokens, pools,
                                                 table, lengths, active,
-                                                slots, ring=ring_)
+                                                slots, ring=ring_,
+                                                attn_impl=attn_impl_)
             tok = sample_tokens(logits[:, -1], lengths + 1,
                                 seeds, temps, top_k, top_p)
             return tok, logits, pools
 
-        self._prefill_fn = jax.jit(_prefill, donate_argnums=(1,))
-        self._decode_fn = jax.jit(_decode, donate_argnums=(1,))
+        self._prefill_fn = jax.jit(_pin_bnn(_prefill), donate_argnums=(1,))
+        self._decode_fn = jax.jit(_pin_bnn(_decode), donate_argnums=(1,))
 
         if self._spec_k:
             def _spec(params, pools, tokens, table, lengths, n_valid, slots,
@@ -185,7 +210,7 @@ class Engine:
                 b, c = tokens.shape
                 logits, pools, snaps = M.spec_verify(
                     params, cfg_, tokens, pools, table, lengths, n_valid,
-                    slots, ring=ring_)
+                    slots, ring=ring_, attn_impl=attn_impl_)
                 # sample EVERY position with its own (seed, index) key —
                 # identical to what plain decoding would draw there
                 idx = (lengths[:, None] + 1
@@ -213,11 +238,11 @@ class Engine:
                 pools = M.restore_slot_state(cfg_, pools, slots, snaps)
                 _, pools = M.prefill_chunk(params, cfg_, tokens, pools,
                                            table, lengths, n_commit, slots,
-                                           ring=ring_)
+                                           ring=ring_, attn_impl=attn_impl_)
                 return pools
 
-            self._spec_fn = jax.jit(_spec, donate_argnums=(1,))
-            self._repair_fn = jax.jit(_repair, donate_argnums=(1,))
+            self._spec_fn = jax.jit(_pin_bnn(_spec), donate_argnums=(1,))
+            self._repair_fn = jax.jit(_pin_bnn(_repair), donate_argnums=(1,))
 
     # ---------------------------------------------------------------- API
 

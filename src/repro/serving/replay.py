@@ -76,11 +76,13 @@ class TraceReplayer:
     analytically (cost model) and by transaction-level simulation."""
 
     def __init__(self, cfg, accelerator: str = "OXBNN_50",
-                 knobs: SimKnobs = SimKnobs()):
+                 knobs: SimKnobs = SimKnobs(), *, fused_bnn: bool = True):
         self.cfg = cfg
         self.acc = accelerators.by_name(accelerator)
         self.knobs = knobs
-        self.cost = PhotonicCostModel(cfg, accelerator, knobs)
+        self.fused_bnn = fused_bnn
+        self.cost = PhotonicCostModel(cfg, accelerator, knobs,
+                                      fused_bnn=fused_bnn)
         self.specs = gemm_specs(cfg)
         self._memo: dict[int, tuple[float, float]] = {}
 
@@ -100,6 +102,9 @@ class TraceReplayer:
                                 self.knobs)
             lat += lr.latency_s
             en += lr.energy_j
+        # unfused chain: every token's packed activations round-trip
+        # through eDRAM between GEMMs (see PhotonicCostModel.__init__)
+        lat += n_tokens * self.cost.pack_pass_s_per_token
         self._memo[n_tokens] = (lat, en)
         return lat, en
 
@@ -178,6 +183,8 @@ class TraceReplayer:
             "schema_version": REPLAY_SCHEMA_VERSION,
             "arch": self.cfg.name,
             "accelerator": self.acc.name,
+            "fused_bnn": self.fused_bnn,
+            "pack_pass_s_per_token": self.cost.pack_pass_s_per_token,
             # per-shard traces (ShardedEngine) carry their shard id in
             # the meta record; single-engine traces report shard=None
             "shard": meta.get("shard"),
@@ -233,7 +240,8 @@ def spec_chunk_cap(curve: dict) -> int | None:
 
 
 def replay_trace(source, cfg=None, accelerator: str | None = None,
-                 knobs: SimKnobs = SimKnobs()) -> dict:
+                 knobs: SimKnobs = SimKnobs(), *,
+                 fused_bnn: bool = True) -> dict:
     """Replay a trace (JSONL path or record list) through the photonic
     simulator.  ``cfg``/``accelerator`` default to what the trace's
     meta record says the engine ran with."""
@@ -245,7 +253,8 @@ def replay_trace(source, cfg=None, accelerator: str | None = None,
         cfg = load_config(meta)
     if accelerator is None:
         accelerator = meta.get("accelerator", "OXBNN_50")
-    return TraceReplayer(cfg, accelerator, knobs).replay(records)
+    return TraceReplayer(cfg, accelerator, knobs,
+                         fused_bnn=fused_bnn).replay(records)
 
 
 def format_report(rep: dict) -> str:
