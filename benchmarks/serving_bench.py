@@ -52,18 +52,25 @@ from repro.serving import (Engine, EngineConfig, SamplingParams,
                            ShardedEngine, layer_layouts, nearest_rank,
                            replay_trace)
 
-BENCH_SCHEMA_VERSION = 1
+BENCH_SCHEMA_VERSION = 2
 
 # BENCH_serving.json contract (CI fails the smoke job on violation)
 BENCH_REQUIRED_KEYS = ("schema_version", "bench", "params", "rows")
 BENCH_REQUIRED_ROW_KEYS = ("arch", "decode_tokens_per_s",
                            "total_tokens_per_s", "p50_latency_s",
-                           "p99_latency_s", "modeled_tokens_per_s")
+                           "p99_latency_s", "p50_first_token_s",
+                           "p99_first_token_s", "modeled_tokens_per_s")
 BENCH_REQUIRED_REPLAY_KEYS = ("schema_version", "simulated_tokens_per_s",
                               "simulated_fps", "analytic_s", "simulated_s")
 # sharded rows (shards > 1) additionally carry per-host breakdowns
-BENCH_REQUIRED_SHARD_KEYS = ("shard", "alive", "decoded_tokens", "wall_s",
-                             "decode_tokens_per_s", "swap_losts")
+BENCH_REQUIRED_SHARD_KEYS = ("shard", "role", "alive", "decoded_tokens",
+                             "wall_s", "decode_tokens_per_s", "swap_losts")
+# disaggregated rows (--roles P:D) carry the handoff report and the
+# token-identity verdict against the equal-shard mixed baseline
+BENCH_REQUIRED_ROLE_KEYS = ("roles", "handoff", "token_identical_to_mixed")
+BENCH_REQUIRED_HANDOFF_KEYS = ("handoffs", "handoff_bytes", "link_gbps",
+                               "modeled_transfer_s",
+                               "modeled_transfer_ms_per_handoff")
 
 # one row per mixer family: paged KV, slot (ssm), paged latent (mla),
 # ring buffer (sliding window), hybrid (slots + paged KV per layer)
@@ -96,7 +103,8 @@ def bench_arch(arch: str, *, smoke: bool, n_requests: int, rate_hz: float,
                shared_frac: float = 0.5, spec_k: int = 0,
                temperature: float = 0.0,
                trace_path: str | None = None,
-               replay_photonic: bool = False, n_shards: int = 1) -> dict:
+               replay_photonic: bool = False, n_shards: int = 1,
+               roles: str | None = None) -> dict:
     cfg = configs.get_config(arch)
     if smoke:
         cfg = reduced(cfg)
@@ -136,7 +144,7 @@ def bench_arch(arch: str, *, smoke: bool, n_requests: int, rate_hz: float,
         # simulation (shards step sequentially); the per-shard rows do.
         n_requests *= n_shards
         rate_hz *= n_shards
-        eng = ShardedEngine(params, cfg, ecfg, n_shards)
+        eng = ShardedEngine(params, cfg, ecfg, n_shards, roles=roles)
     else:
         eng = Engine(params, cfg, ecfg)
 
@@ -161,8 +169,11 @@ def bench_arch(arch: str, *, smoke: bool, n_requests: int, rate_hz: float,
                 for i in range(n_shards) for _ in range(max_batch)]
         eng.run()
         for w in warm:
-            i = eng.shard_of.pop(w)
-            eng.engines[i].requests.pop(w)
+            # a warm request may have crossed shards (prefill->decode
+            # handoff), so evict it from every engine it touched
+            eng.shard_of.pop(w)
+            for e in eng.engines:
+                e.requests.pop(w, None)
             eng.requests.pop(w)
     else:
         warm = [eng.submit(prompts[0], 2 + max_batch)
@@ -226,9 +237,24 @@ def bench_arch(arch: str, *, smoke: bool, n_requests: int, rate_hz: float,
     lats = sorted((eng.requests[rid].finish_s - t0) - arr
                   for rid, arr in submitted.items()
                   if eng.requests[rid].finish_s is not None)
+    # time-to-first-token (arrival -> first decoded token): THE number
+    # disaggregation moves — dedicated prefill shards keep fresh
+    # prompts out of the decode batches' way, at the cost of one
+    # modeled link transfer per request
+    ft_lats = sorted((eng.requests[rid].first_token_s - t0) - arr
+                     for rid, arr in submitted.items()
+                     if eng.requests[rid].first_token_s is not None)
+    # generated tokens per request, for the mixed-vs-disaggregated
+    # identity gate (underscore keys are stripped from the bench JSON)
+    outputs = {rid: list(eng.requests[rid].out) for rid in submitted
+               if eng.requests[rid].finish_s is not None}
     if n_shards > 1:
-        return _sharded_row(arch, eng, n_requests, wall, lats, n_shards,
-                            trace_path, replay_per_shard)
+        row = _sharded_row(arch, eng, n_requests, wall, lats, n_shards,
+                           trace_path, replay_per_shard)
+        row["p50_first_token_s"] = nearest_rank(ft_lats, 50)
+        row["p99_first_token_s"] = nearest_rank(ft_lats, 99)
+        row["_outputs"] = outputs
+        return row
     st = eng.stats()
     pc, sw, mx, sp = (st["prefix_cache"], st["swap"], st["mixer"],
                       st["speculative"])
@@ -245,6 +271,9 @@ def bench_arch(arch: str, *, smoke: bool, n_requests: int, rate_hz: float,
             (st["decoded_tokens"] + st["prefill_tokens"]) / wall,
         "p50_latency_s": nearest_rank(lats, 50),
         "p99_latency_s": nearest_rank(lats, 99),
+        "p50_first_token_s": nearest_rank(ft_lats, 50),
+        "p99_first_token_s": nearest_rank(ft_lats, 99),
+        "_outputs": outputs,
         "max_concurrent": st["max_concurrent_decode"],
         "acceptance_rate": sp["acceptance_rate"],
         "tokens_per_decode_step": sp["tokens_per_decode_step"],
@@ -307,6 +336,8 @@ def _sharded_row(arch: str, eng, n_requests: int, wall: float, lats,
         "aggregate_decode_tokens_per_s":
             sst["aggregate_decode_tokens_per_s"],
         "per_shard": sst["per_shard"],
+        "roles": sst["roles"],
+        "handoff": sst["handoff"],
         "migrations": sst["migrations"],
         "requeued_lost": sst["requeued_lost"],
         "decode_tokens_per_s": sst["decoded_tokens"] / wall,
@@ -317,8 +348,10 @@ def _sharded_row(arch: str, eng, n_requests: int, wall: float, lats,
         "max_concurrent": max(s["max_concurrent_decode"] for s in sub),
         "acceptance_rate": accepted / drafted if drafted else 0.0,
         "tokens_per_decode_step": produced / rows_ if rows_ else 0.0,
+        # prefill-role shards compile no spec graph (speedup reads 1),
+        # so take the decode shards' figure
         "modeled_spec_speedup":
-            sub[0]["photonic"]["modeled_spec_speedup"],
+            max(s["photonic"]["modeled_spec_speedup"] for s in sub),
         "preemptions": ssum("preemptions"),
         "prefix_hit_rate": phits / pq if pq else 0.0,
         "skipped_prefill_tokens":
@@ -356,7 +389,8 @@ def write_bench_json(path: str, rows: list[dict], params: dict):
         "bench": "serving",
         "generated_by": "benchmarks/serving_bench.py",
         "params": params,
-        "rows": [{k: v for k, v in r.items()} for r in rows],
+        "rows": [{k: v for k, v in r.items()
+                  if not k.startswith("_")} for r in rows],
     }
     with open(path, "w") as fh:
         json.dump(doc, fh, indent=2, default=float)
@@ -408,6 +442,21 @@ def check_bench_json(path: str) -> list[str]:
                     if k not in rp:
                         problems.append(
                             f"row {i} replay_per_shard[{j}]: missing {k!r}")
+        if row.get("disaggregated"):
+            for k in BENCH_REQUIRED_ROLE_KEYS:
+                if k not in row:
+                    problems.append(
+                        f"row {i} ({row.get('arch')}): disaggregated "
+                        f"row missing {k!r}")
+            for k in BENCH_REQUIRED_HANDOFF_KEYS:
+                if k not in (row.get("handoff") or {}):
+                    problems.append(
+                        f"row {i} ({row.get('arch')}): handoff report "
+                        f"missing {k!r}")
+            if row.get("token_identical_to_mixed") is not True:
+                problems.append(
+                    f"row {i} ({row.get('arch')}): disaggregated tokens "
+                    "diverged from the mixed baseline")
     return problems
 
 
@@ -450,6 +499,15 @@ def main():
                     help="decode shards over the data axis (simulate "
                          "hosts with XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--roles", default=None, metavar="P:D",
+                    help="disaggregated prefill/decode comparison: run "
+                         "each arch once as P+D mixed shards and once "
+                         "as P prefill + D decode workers over the "
+                         "same prompt stream; reports decode tok/s, "
+                         "p99 first-token latency and modeled transfer "
+                         "ms side by side, and FAILS unless the two "
+                         "topologies emit identical tokens (overrides "
+                         "--shards/--shard-sweep)")
     ap.add_argument("--shard-sweep", default=None, metavar="N,N,...",
                     help="run each arch at several shard counts, one "
                          "row per count (e.g. 1,2,4); overrides "
@@ -496,11 +554,24 @@ def main():
           f"{'modeled tok/s':>14} {'eff tok/s':>12} {'spec-x':>7}")
     shard_counts = ([int(x) for x in args.shard_sweep.split(",")]
                     if args.shard_sweep else [args.shards])
+    if args.roles:
+        # mixed oracle first, disaggregated second — the identity gate
+        # compares the second run's tokens against the first's
+        p_n, d_n = (int(x) for x in args.roles.split(":"))
+        total = p_n + d_n
+        variants = [(f"@{total}sh-mixed", total, None),
+                    (f"@roles{p_n}p{d_n}d", total, args.roles)]
+    else:
+        variants = [
+            (f"@{n_sh}sh" if len(shard_counts) > 1 or n_sh > 1 else "",
+             n_sh, None)
+            for n_sh in shard_counts]
     failures = []
+    diverged = []
     rows = []
     for arch in archs:
-      for n_sh in shard_counts:
-        suffix = f"@{n_sh}sh" if len(shard_counts) > 1 or n_sh > 1 else ""
+      mixed_row = None
+      for suffix, n_sh, role_spec in variants:
         tpath = (os.path.join(
                      args.trace,
                      f"trace_{arch.replace('/', '_')}"
@@ -516,11 +587,32 @@ def main():
                        spec_k=args.spec_k, temperature=args.temperature,
                        trace_path=tpath,
                        replay_photonic=args.replay_photonic,
-                       n_shards=n_sh)
+                       n_shards=n_sh, roles=role_spec)
         rows.append(r)
+        if args.roles and role_spec is None:
+            mixed_row = r
+        elif role_spec is not None:
+            ident = r["_outputs"] == mixed_row["_outputs"]
+            r["disaggregated"] = True
+            r["token_identical_to_mixed"] = ident
+            ho = r["handoff"]
+            print(f"[bench] {arch} roles={role_spec} vs mixed@{n_sh}: "
+                  f"decode tok/s "
+                  f"{r['aggregate_decode_tokens_per_s']:.1f} vs "
+                  f"{mixed_row['aggregate_decode_tokens_per_s']:.1f} | "
+                  f"p99 first-token "
+                  f"{1e3 * r['p99_first_token_s']:.1f}ms vs "
+                  f"{1e3 * mixed_row['p99_first_token_s']:.1f}ms | "
+                  f"transfer "
+                  f"{ho['modeled_transfer_ms_per_handoff']:.4f}ms/handoff "
+                  f"x{ho['handoffs']} | tokens "
+                  f"{'identical' if ident else 'DIVERGED'}")
+            if not ident:
+                diverged.append(arch)
         if n_sh > 1:
             per = "  ".join(
-                f"s{p['shard']}:{p['decode_tokens_per_s']:.1f}"
+                f"s{p['shard']}({p['role'][0]}):"
+                f"{p['decode_tokens_per_s']:.1f}"
                 for p in r["per_shard"])
             print(f"{arch + suffix:<22} aggregate per-host decode tok/s="
                   f"{r['aggregate_decode_tokens_per_s']:>9.1f}  [{per}]")
@@ -583,10 +675,15 @@ def main():
                   "shared_frac": args.shared_frac, "spec_k": args.spec_k,
                   "temperature": args.temperature,
                   "replay_photonic": args.replay_photonic,
-                  "shards": shard_counts}
+                  "shards": shard_counts, "roles": args.roles}
         write_bench_json(args.bench_json, rows, params)
         print(f"[bench] wrote {args.bench_json} "
               f"(schema v{BENCH_SCHEMA_VERSION}, {len(rows)} rows)")
+    if diverged:
+        raise SystemExit(
+            f"--roles: disaggregated tokens diverged from the mixed "
+            f"baseline on {diverged} — the prefill->decode handoff must "
+            "be bit-exact")
     if failures:
         raise SystemExit(
             f"--require-snapshot-hits: no snapshot reuse on {failures} "

@@ -17,7 +17,13 @@ from dataclasses import dataclass
 
 
 class HeartbeatMonitor:
-    """Tracks per-host liveness and step-time stragglers."""
+    """Tracks per-host liveness and step-time stragglers.
+
+    ``set_groups`` partitions hosts into comparison classes (e.g. the
+    serving layer's prefill vs decode worker roles): straggler medians
+    are computed WITHIN a group, because a prefill shard's chunk-sized
+    steps are legitimately slower than decode steps — a role-blind
+    fleet median would drain every prefill worker as a straggler."""
 
     def __init__(self, n_hosts: int, dead_after: float,
                  straggler_factor: float = 2.0):
@@ -26,6 +32,12 @@ class HeartbeatMonitor:
         self.straggler_factor = straggler_factor
         self._last_beat: dict[int, float] = {}
         self._step_time: dict[int, float] = {}
+        self._group_of: dict[int, str] = {}
+
+    def set_groups(self, group_of: dict[int, str]):
+        """host -> comparison-class label (unlisted hosts share one
+        implicit default group)."""
+        self._group_of = dict(group_of)
 
     def beat(self, host: int, now: float, step_time: float | None = None):
         self._last_beat[host] = now
@@ -35,9 +47,13 @@ class HeartbeatMonitor:
     def stragglers(self) -> list[int]:
         if not self._step_time:
             return []
-        med = statistics.median(self._step_time.values())
-        return sorted(h for h, t in self._step_time.items()
-                      if t > self.straggler_factor * med)
+        by_group: dict[str, list[float]] = {}
+        for h, t in self._step_time.items():
+            by_group.setdefault(self._group_of.get(h, ""), []).append(t)
+        med = {g: statistics.median(ts) for g, ts in by_group.items()}
+        return sorted(
+            h for h, t in self._step_time.items()
+            if t > self.straggler_factor * med[self._group_of.get(h, "")])
 
     def dead_hosts(self, now: float) -> list[int]:
         dead = [h for h in range(self.n_hosts)

@@ -107,13 +107,17 @@ def serve(arch: str, *, smoke: bool = False, multi_pod: bool = False,
           spec_k: int = 0, spec_ngram: int = 3,
           attn_impl: str = "auto", bnn_impl: str = "auto",
           trace: str | None = None, replay_photonic: bool = False,
-          capture_logits: bool = False, shards: int = 1):
+          capture_logits: bool = False, shards: int = 1,
+          roles: str | None = None):
     """Serve ``batch`` synthetic requests; returns (batch, prompt+gen)
     token ids (prompt prefix included, matching the legacy loop).  With
     stop tokens the generations can end early — the result is then a
     ragged list instead of a stacked array.  ``shards > 1`` shards the
     decode batch over the data axis (one engine per shard — see
-    serving/sharded.py); output stays token-identical to 1 shard."""
+    serving/sharded.py); output stays token-identical to 1 shard.
+    ``roles`` disaggregates the shards into prefill/decode workers
+    ("P:D" counts, e.g. "1:2", or explicit comma names); tokens remain
+    identical to the mixed topology."""
     if engine == "legacy":
         return serve_legacy(arch, smoke=smoke, multi_pod=multi_pod,
                             batch=batch, prompt_len=prompt_len, gen=gen,
@@ -139,7 +143,7 @@ def serve(arch: str, *, smoke: bool = False, multi_pod: bool = False,
             eng = ShardedEngine(
                 params, cfg, ecfg, shards,
                 meshes=S.shard_meshes(shards, mesh=mesh),
-                rules=S.rules_decode(False))
+                rules=S.rules_decode(False), roles=roles)
         else:
             eng = Engine(params, cfg, ecfg)
         if trace or replay_photonic:
@@ -175,7 +179,7 @@ def serve(arch: str, *, smoke: bool = False, multi_pod: bool = False,
                     print(format_report(rep))
         if verbose and shards > 1:
             for row in stats["per_shard"]:
-                print(f"[serve] shard {row['shard']}"
+                print(f"[serve] shard {row['shard']} ({row['role']})"
                       f"{'' if row['alive'] else ' (dead)'}: "
                       f"decoded={row['decoded_tokens']} "
                       f"decode-tokens/s={row['decode_tokens_per_s']:.1f} "
@@ -187,6 +191,15 @@ def serve(arch: str, *, smoke: bool = False, multi_pod: bool = False,
                   f"{stats['aggregate_decode_tokens_per_s']:.1f} "
                   f"migrations={stats['migrations']} "
                   f"requeued_lost={stats['requeued_lost']}")
+            ho = stats["handoff"]
+            if ho["handoffs"]:
+                print(f"[serve] handoffs={ho['handoffs']} "
+                      f"bytes={ho['handoff_bytes']} "
+                      f"modeled-transfer="
+                      f"{1e3 * ho['modeled_transfer_s']:.3f}ms "
+                      f"@{ho['link_gbps']:.0f}Gb/s "
+                      f"(host-copy wall "
+                      f"{1e3 * ho['host_copy_wall_s']:.1f}ms)")
         elif verbose:
             ph, pc, sw = (stats["photonic"], stats["prefix_cache"],
                           stats["swap"])
@@ -290,6 +303,11 @@ def main():
                     help="decode shards over the data axis (1 = single "
                          "engine; simulate hosts with XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--roles", default=None, metavar="P:D",
+                    help="disaggregate the shards into prefill/decode "
+                         "workers: 'P:D' counts (e.g. 1:2) or explicit "
+                         "comma names (prefill,decode,mixed); must "
+                         "cover --shards; default all-mixed")
     args = ap.parse_args()
     serve(args.arch, smoke=args.smoke, multi_pod=args.multi_pod,
           batch=args.batch, prompt_len=args.prompt_len, gen=args.gen,
@@ -305,7 +323,7 @@ def main():
           spec_k=args.spec_k, spec_ngram=args.spec_ngram,
           attn_impl=args.attn_impl, bnn_impl=args.bnn_impl,
           trace=args.trace, replay_photonic=args.replay_photonic,
-          shards=args.shards)
+          shards=args.shards, roles=args.roles)
 
 
 if __name__ == "__main__":

@@ -12,6 +12,9 @@ from repro.serving.mixer_state import (                             # noqa: F401
 from repro.serving.replay import (                                  # noqa: F401
     TraceReplayer, format_report, replay_trace, spec_chunk_cap)
 from repro.serving.request import Request, State                    # noqa: F401
+from repro.serving.roles import (                                   # noqa: F401
+    DECODE, MIXED, PREFILL, ROLES, Role, build_step_fns, get_role,
+    parse_roles, validate_roles)
 from repro.serving.sharded import ShardedEngine                     # noqa: F401
 from repro.serving.scheduler import (                               # noqa: F401
     Scheduler, SchedulerConfig, StepPlan)

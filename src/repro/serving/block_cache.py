@@ -534,6 +534,11 @@ class BlockKVCache(MixerState):
             self.swap_outs += 1
             self.swapped_blocks += len(ids)
             sp.extra["blocks"] = len(ids)
+            # serialized payload size: what a swap-to-peer migration or
+            # prefill->decode handoff actually moves over the link
+            # (re-adopted leading blocks never left the destination)
+            sp.extra["bytes"] = sum(int(a.nbytes) for layer in host
+                                    for a in layer.values())
 
     def swap_in(self, req) -> bool | None:
         """Restore a swapped request.  Registered blocks are re-adopted

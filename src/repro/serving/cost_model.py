@@ -101,11 +101,13 @@ class PhotonicCostModel:
     """Per-layer latencies for one arch on one accelerator config."""
 
     def __init__(self, cfg, accelerator: str = "OXBNN_50",
-                 knobs: SimKnobs = SimKnobs(), *, fused_bnn: bool = True):
+                 knobs: SimKnobs = SimKnobs(), *, fused_bnn: bool = True,
+                 link_gbps: float = 100.0):
         self.cfg = cfg
         self.acc = accelerators.by_name(accelerator)
         self.knobs = knobs
         self.fused_bnn = fused_bnn
+        self.link_gbps = link_gbps
         self.specs = gemm_specs(cfg)
         self.layers = [simulate_layer(self.acc, s, knobs)
                        for s in self.specs]
@@ -144,6 +146,42 @@ class PhotonicCostModel:
     def step_latency_s(self, n_tokens: int) -> float:
         """Batch-1-sequential accelerator: B rows = B tokens back-to-back."""
         return n_tokens * self.token_latency_s
+
+    # -------------------------------------------- prefill->decode handoff
+
+    def transfer_latency_s(self, n_bytes: int) -> float:
+        """Modeled time to stream one handoff's serialized state (KV
+        block tails + recurrent snapshots + the token ids) over the
+        inter-shard link at ``link_gbps`` — the explicit transfer stage
+        of a disaggregated prefill->decode topology.  The destination
+        overlaps it with its own decode steps (``transfer_steps_overlap``
+        converts it to a step count for the admission gate)."""
+        return n_bytes * 8.0 / (self.link_gbps * 1e9)
+
+    def transfer_steps_overlap(self, n_bytes: int, *,
+                               max_steps: int = 256) -> int:
+        """Destination decode steps the modeled transfer overlaps: the
+        link streams while the decode batch keeps stepping, so the
+        request parks for ceil(transfer / token_latency) steps (at
+        least 1 — the handoff is never free — and clamped so a modeled
+        slow link cannot park a request forever)."""
+        steps = math.ceil(self.transfer_latency_s(n_bytes)
+                          / self.token_latency_s)
+        return max(1, min(steps, max_steps))
+
+    def handoff_report(self, *, handoffs: int, handoff_bytes: int) -> dict:
+        """Transfer-stage summary for ``stats()``/replay: total modeled
+        link time and the per-handoff mean, next to the bandwidth it
+        was priced at."""
+        total_s = self.transfer_latency_s(handoff_bytes)
+        return {
+            "handoffs": handoffs,
+            "handoff_bytes": handoff_bytes,
+            "link_gbps": self.link_gbps,
+            "modeled_transfer_s": total_s,
+            "modeled_transfer_ms_per_handoff": (
+                total_s / handoffs * 1e3 if handoffs else 0.0),
+        }
 
     # --------------------------------------------------- speculative decode
 

@@ -42,17 +42,16 @@ import math
 import time
 from dataclasses import asdict, dataclass
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops as kops
-from repro.models import transformer as M
+from repro.serving import roles as R
 from repro.serving.block_cache import MixerStateCache
 from repro.serving.cost_model import PhotonicCostModel
 from repro.serving.request import Request, State
 from repro.serving.sampling import (SamplingParams, prompt_lookup_draft,
-                                    sample_tokens, sampling_rows)
+                                    sampling_rows)
 from repro.serving.scheduler import Scheduler, SchedulerConfig
 from repro.serving.tracing import Tracer
 
@@ -90,6 +89,12 @@ class EngineConfig:
     spec_ngram: int = 3              # max n-gram for prompt-lookup drafts
     attn_impl: str = "auto"          # paged attention: pallas | xla | auto
     bnn_impl: str = "auto"           # packed BNN GEMM: pallas | xla | auto
+    role: str = "mixed"              # worker role: mixed | prefill | decode
+                                     # (serving/roles.py; prefill shards
+                                     # hand completed prompts to a decode
+                                     # peer via the ShardedEngine)
+    link_gbps: float = 100.0         # modeled inter-shard link bandwidth
+                                     # (prefill->decode handoff transfer)
 
 
 class Engine:
@@ -116,6 +121,12 @@ class Engine:
         # wider than a prefill chunk (k + 1 <= prefill_chunk)
         self._spec_k = (min(ecfg.spec_k, ecfg.prefill_chunk - 1)
                         if ecfg.spec_k > 0 else 0)
+        # worker role (serving/roles.py): gates which plan rows run and
+        # whether completed prefills park for peer handoff; a prefill
+        # worker never drafts/verifies, so its spec budget is zero
+        self.role = R.get_role(ecfg.role)
+        if not self.role.runs_decode:
+            self._spec_k = 0
         self.scheduler = Scheduler(
             SchedulerConfig(max_batch=ecfg.max_batch,
                             max_tokens_in_flight=ecfg.max_tokens_in_flight,
@@ -124,12 +135,13 @@ class Engine:
                             policy=ecfg.policy,
                             preempt_policy=ecfg.preempt_policy,
                             decode_cost=1 + self._spec_k),
-            self.cache, tracer=self.tracer)
+            self.cache, tracer=self.tracer, role=self.role)
         # the fused Pallas chain never spills packed activations to
         # HBM; the XLA oracle prices the extra pack pass per GEMM
         self.cost_model = PhotonicCostModel(
             cfg, ecfg.accelerator,
-            fused_bnn=kops.resolve_impl(ecfg.bnn_impl) == "pallas")
+            fused_bnn=kops.resolve_impl(ecfg.bnn_impl) == "pallas",
+            link_gbps=ecfg.link_gbps)
         self.requests: dict[int, Request] = {}
         self.step_count = 0
         self._next_rid = 0
@@ -154,95 +166,19 @@ class Engine:
         self._draft_accepted = 0
         self._spec_repairs = 0
         self._has_slots = self.cache.ssm is not None
+        # prompts whose prefill completed on a hand-off role, awaiting
+        # export to a decode peer (drained by ShardedEngine.step)
+        self.handoff_ready: list[int] = []
 
-        cfg_ = cfg  # closure constants (static); params/pools stay args
-        ring_ = self.cache.ring_blocks > 0
-        attn_impl_ = ecfg.attn_impl
-
-        def _pin_bnn(fn):
-            # the BNN impl is resolved at TRACE time inside bnn_dense;
-            # pinning the module default around the traced body bakes
-            # the engine's choice into the jitted graph without
-            # threading an impl kwarg through every layer signature
-            if ecfg.bnn_impl == "auto":
-                return fn
-
-            def wrapped(*a, **kw):
-                prev = kops.set_default_impl(ecfg.bnn_impl)
-                try:
-                    return fn(*a, **kw)
-                finally:
-                    kops.set_default_impl(prev)
-            return wrapped
-
-        def _prefill(params, pools, tokens, table, lengths, n_valid, slots,
-                     seeds, temps, top_k, top_p):
-            logits, pools = M.prefill_chunk(params, cfg_, tokens, pools,
-                                            table, lengths, n_valid, slots,
-                                            ring=ring_, attn_impl=attn_impl_)
-            # chunk-final logits row -> the would-be next token (used by
-            # the engine only when this chunk completes the prompt)
-            gather = jnp.maximum(n_valid - 1, 0)[:, None, None]
-            last = jnp.take_along_axis(
-                logits, jnp.broadcast_to(
-                    gather, (logits.shape[0], 1, logits.shape[2])),
-                axis=1)[:, 0]
-            tok = sample_tokens(last, lengths + n_valid,
-                                seeds, temps, top_k, top_p)
-            return tok, logits, pools
-
-        def _decode(params, pools, tokens, table, lengths, active, slots,
-                    seeds, temps, top_k, top_p):
-            logits, pools = M.paged_decode_step(params, cfg_, tokens, pools,
-                                                table, lengths, active,
-                                                slots, ring=ring_,
-                                                attn_impl=attn_impl_)
-            tok = sample_tokens(logits[:, -1], lengths + 1,
-                                seeds, temps, top_k, top_p)
-            return tok, logits, pools
-
-        self._prefill_fn = jax.jit(_pin_bnn(_prefill), donate_argnums=(1,))
-        self._decode_fn = jax.jit(_pin_bnn(_decode), donate_argnums=(1,))
-
-        if self._spec_k:
-            def _spec(params, pools, tokens, table, lengths, n_valid, slots,
-                      draft, seeds, temps, top_k, top_p):
-                b, c = tokens.shape
-                logits, pools, snaps = M.spec_verify(
-                    params, cfg_, tokens, pools, table, lengths, n_valid,
-                    slots, ring=ring_, attn_impl=attn_impl_)
-                # sample EVERY position with its own (seed, index) key —
-                # identical to what plain decoding would draw there
-                idx = (lengths[:, None] + 1
-                       + jnp.arange(c, dtype=jnp.int32)[None, :])
-                rep = lambda a: jnp.repeat(a, c)
-                sampled = sample_tokens(
-                    logits.reshape(b * c, -1), idx.reshape(-1),
-                    rep(seeds), rep(temps), rep(top_k), rep(top_p)
-                ).reshape(b, c)
-                # accepted draft prefix: position j counts while the
-                # verifier's token agrees with the draft's
-                j = jnp.arange(c - 1, dtype=jnp.int32)[None, :]
-                ok = (sampled[:, :-1] == draft) & (j < (n_valid - 1)[:, None])
-                acc = jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=1),
-                              axis=1)
-                n_commit = jnp.where(n_valid > 0, acc + 1, 0)
-                return sampled, n_commit, pools, snaps
-
-            def _repair(params, pools, tokens, table, lengths, n_commit,
-                        slots, snaps):
-                # SSM rollback for partially-accepted rows: restore the
-                # pre-verify slot snapshots, then re-advance every row by
-                # exactly its committed prefix (masked prefill re-writes
-                # identical K/V for block layers — idempotent)
-                pools = M.restore_slot_state(cfg_, pools, slots, snaps)
-                _, pools = M.prefill_chunk(params, cfg_, tokens, pools,
-                                           table, lengths, n_commit, slots,
-                                           ring=ring_, attn_impl=attn_impl_)
-                return pools
-
-            self._spec_fn = jax.jit(_pin_bnn(_spec), donate_argnums=(1,))
-            self._repair_fn = jax.jit(_pin_bnn(_repair), donate_argnums=(1,))
+        # jitted step closures, built per role (serving/roles.py): a
+        # prefill worker only compiles the prefill graph
+        fns = R.build_step_fns(cfg, ecfg, self.role,
+                               ring=self.cache.ring_blocks > 0,
+                               spec_k=self._spec_k)
+        self._prefill_fn = fns.prefill
+        self._decode_fn = fns.decode
+        self._spec_fn = fns.spec
+        self._repair_fn = fns.repair
 
     # ---------------------------------------------------------------- API
 
@@ -258,7 +194,8 @@ class Engine:
             arch=self.cfg.name, accelerator=self.ecfg.accelerator,
             config=asdict(self.cfg), engine=asdict(self.ecfg),
             spec_k=self._spec_k, shard=self.shard,
-            n_shards=self.n_shards)
+            n_shards=self.n_shards, role=self.role.name,
+            link_gbps=self.ecfg.link_gbps, t0=self.tracer.t0)
         return self.tracer
 
     def stop_trace(self):
@@ -333,7 +270,8 @@ class Engine:
             ev = {"type": "step", "step": step, "dur_s": dt,
                   "kind": "+".join(
                       k for k in ("prefill", "decode", "spec_verify")
-                      if k in rec) or "idle"}
+                      if k in rec) or "idle",
+                  "role": self.role.name}
             if self.shard is not None:
                 ev["shard"] = self.shard
             ev.update(rec)
@@ -390,6 +328,8 @@ class Engine:
         Request, no longer tracked by this engine."""
         req = self.requests.pop(rid)
         step = self.step_count
+        if rid in self.handoff_ready:
+            self.handoff_ready.remove(rid)
         if req in self.scheduler.running:
             self.scheduler.running.remove(req)
             if req.pos > 0:
@@ -411,6 +351,14 @@ class Engine:
         and surface the loss as ``swap_lost`` (scheduler.adopt)."""
         if lost:
             req.reset_for_requeue()
+            req.transfer_steps = 0
+            req.transfer_until_step = None
+        if req.transfer_steps:
+            # transfer-aware admission: the modeled link is still
+            # streaming this request's state; the scheduler defers it
+            # (reason=transfer_pending) until the arrival deadline,
+            # overlapping the transfer with this shard's decode steps
+            req.transfer_until_step = self.step_count + req.transfer_steps
         self.requests[req.rid] = req
         self._next_rid = max(self._next_rid, req.rid + 1)
         self.scheduler.adopt(req, self.step_count, lost=lost)
@@ -460,6 +408,14 @@ class Engine:
             if req.done:
                 self.scheduler.finish(step, req)
                 req.finish_s = time.perf_counter()
+            elif self.role.hands_off:
+                # prefill worker: the prompt (and its first token) are
+                # done here — park for export to a decode peer.  The
+                # ShardedEngine drains this list right after the step
+                # and streams the request over the swap-to-peer path.
+                self.handoff_ready.append(req.rid)
+                self.scheduler._ev(step, "handoff_ready", req.rid,
+                                   pos=req.pos)
 
     @staticmethod
     def _bucket(n: int) -> int:
@@ -671,6 +627,7 @@ class Engine:
         wall_s = self.tracer.span_total("step")
         return {
             "steps": self.step_count,
+            "role": self.role.name,
             "finished": len(finished),
             "decoded_tokens": self._decoded,
             "prefill_tokens": self._prefilled,

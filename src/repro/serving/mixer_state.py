@@ -423,7 +423,7 @@ class RecurrentSlotState(MixerState):
         re-adoption against the PEER's snapshot index (swap-to-peer): if
         the destination already holds the snapshot for the parked depth
         by content hash, no state crosses shards at all."""
-        with self.tracer.span("snapshot_out", rid=req.rid):
+        with self.tracer.span("snapshot_out", rid=req.rid) as sp:
             bs = self.block_size
             index = self.snapshots if peer is None else peer.snapshots
             if (index is not None and req.pos
@@ -437,6 +437,7 @@ class RecurrentSlotState(MixerState):
                 # than the swap_lost full recompute.  Eviction between
                 # here and swap_in still falls back to recompute.)
                 req.snap_readopt = True
+                sp.extra["bytes"] = 0        # content resident on peer
             else:
                 s = req.slot
                 req.host_state = [
@@ -444,6 +445,9 @@ class RecurrentSlotState(MixerState):
                      for k, v in pool.items()}
                     for pool in self.pools]
                 self.swapped_slots += 1
+                sp.extra["bytes"] = sum(int(a.nbytes)
+                                        for layer in req.host_state
+                                        for a in layer.values())
             self.release(req)
 
     def swap_in(self, req) -> bool | None:

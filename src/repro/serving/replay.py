@@ -76,13 +76,15 @@ class TraceReplayer:
     analytically (cost model) and by transaction-level simulation."""
 
     def __init__(self, cfg, accelerator: str = "OXBNN_50",
-                 knobs: SimKnobs = SimKnobs(), *, fused_bnn: bool = True):
+                 knobs: SimKnobs = SimKnobs(), *, fused_bnn: bool = True,
+                 link_gbps: float = 100.0):
         self.cfg = cfg
         self.acc = accelerators.by_name(accelerator)
         self.knobs = knobs
         self.fused_bnn = fused_bnn
         self.cost = PhotonicCostModel(cfg, accelerator, knobs,
-                                      fused_bnn=fused_bnn)
+                                      fused_bnn=fused_bnn,
+                                      link_gbps=link_gbps)
         self.specs = gemm_specs(cfg)
         self._memo: dict[int, tuple[float, float]] = {}
 
@@ -159,6 +161,21 @@ class TraceReplayer:
         finished = sum(1 for r in records
                        if r.get("type") == "request"
                        and r.get("event") == "finish")
+        # prefill->decode handoff spans (schema v3): bytes moved over
+        # the modeled link, priced by the cost model's transfer term.
+        # The link streams while the destination keeps decoding, so
+        # only the part no decode time can hide is EXPOSED.
+        handoffs_in = handoffs_out = bytes_in = bytes_out = 0
+        for rec in records:
+            if rec.get("type") != "span":
+                continue
+            if rec.get("name") == "handoff_in":
+                handoffs_in += 1
+                bytes_in += rec.get("bytes", 0)
+            elif rec.get("name") == "handoff_out":
+                handoffs_out += 1
+                bytes_out += rec.get("bytes", 0)
+        transfer_s = self.cost.transfer_latency_s(bytes_in)
         analytic_s = sum(t.analytic_s for t in by_kind.values())
         simulated_s = sum(t.simulated_s for t in by_kind.values())
         energy_j = sum(t.simulated_energy_j for t in by_kind.values())
@@ -189,10 +206,28 @@ class TraceReplayer:
             # the meta record; single-engine traces report shard=None
             "shard": meta.get("shard"),
             "n_shards": meta.get("n_shards", 1),
+            "role": meta.get("role", "mixed"),
+            "handoff": {
+                "handoffs_in": handoffs_in,
+                "handoffs_out": handoffs_out,
+                "bytes_in": bytes_in,
+                "bytes_out": bytes_out,
+                "link_gbps": self.cost.link_gbps,
+                "modeled_transfer_s": transfer_s,
+                # transfer time no decode step overlapped away: what a
+                # dedicated-link topology actually adds to the shard's
+                # modeled serving time
+                "exposed_transfer_s": max(
+                    0.0, transfer_s - by_kind.get(
+                        "decode", _KindTotals()).simulated_s),
+            },
             "steps": n_steps,
             "by_kind": {k: t.as_dict() for k, t in by_kind.items()},
             "analytic_s": analytic_s,
             "simulated_s": simulated_s,
+            "simulated_s_with_transfer": simulated_s + max(
+                0.0, transfer_s - by_kind.get(
+                    "decode", _KindTotals()).simulated_s),
             "simulated_energy_j": energy_j,
             "committed_tokens": committed,
             "finished_requests": finished,
@@ -253,8 +288,9 @@ def replay_trace(source, cfg=None, accelerator: str | None = None,
         cfg = load_config(meta)
     if accelerator is None:
         accelerator = meta.get("accelerator", "OXBNN_50")
-    return TraceReplayer(cfg, accelerator, knobs,
-                         fused_bnn=fused_bnn).replay(records)
+    link_gbps = meta.get("link_gbps", 100.0)
+    return TraceReplayer(cfg, accelerator, knobs, fused_bnn=fused_bnn,
+                         link_gbps=link_gbps).replay(records)
 
 
 def format_report(rep: dict) -> str:
@@ -281,6 +317,15 @@ def format_report(rep: dict) -> str:
         f"[replay] simulated {rep['simulated_tokens_per_s']:.0f} tok/s, "
         f"{rep['simulated_fps']:.2f} req/s (FPS), "
         f"{rep['simulated_power_w']:.2f} W modeled")
+    ho = rep.get("handoff") or {}
+    if ho.get("handoffs_in") or ho.get("handoffs_out"):
+        lines.append(
+            f"[replay] role={rep.get('role', 'mixed')} handoffs: "
+            f"{ho['handoffs_out']} out / {ho['handoffs_in']} in, "
+            f"{ho['bytes_in']} B in at {ho['link_gbps']:g} Gb/s -> "
+            f"{ho['modeled_transfer_s'] * 1e3:.3f} ms modeled transfer "
+            f"({ho['exposed_transfer_s'] * 1e3:.3f} ms exposed past "
+            f"decode overlap)")
     curve = rep.get("decode_batch_curve") or {}
     if curve:
         pts = "  ".join(

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+from repro.serving import roles as R
 from repro.serving.request import Request, State
 from repro.serving.tracing import Tracer
 
@@ -51,15 +52,20 @@ class StepPlan:
     prefill: Request | None = None
     prefill_tokens: int = 0
     decode: list[Request] = field(default_factory=list)
+    transfer_waits: int = 0   # queued requests still streaming in over
+                              # the modeled link: progress IS being
+                              # made (the transfer deadline counts this
+                              # shard's steps), so has_work stays True
 
     @property
     def has_work(self) -> bool:
-        return bool(self.admitted or self.prefill or self.decode)
+        return bool(self.admitted or self.prefill or self.decode
+                    or self.transfer_waits)
 
 
 class Scheduler:
     def __init__(self, cfg: SchedulerConfig, cache,
-                 tracer: Tracer | None = None):
+                 tracer: Tracer | None = None, role: R.Role = R.MIXED):
         # ``cache`` implements the MixerState request-lifecycle calls
         # (BlockKVCache for block-only stacks, MixerStateCache for the
         # general composite) — the scheduler never sees layouts.
@@ -67,6 +73,7 @@ class Scheduler:
             raise ValueError(f"unknown preempt_policy {cfg.preempt_policy}")
         self.cfg = cfg
         self.cache = cache
+        self.role = role
         self.tracer = tracer if tracer is not None else Tracer()
         self.queue: list[Request] = []
         self.running: list[Request] = []
@@ -132,6 +139,14 @@ class Scheduler:
 
     def _admit(self, step: int, plan: StepPlan):
         for req in self._queue_order():
+            if R.transfer_pending(req, step):
+                # the modeled prefill->decode link is still streaming
+                # this request in (serving/roles.py): it alone parks —
+                # requests behind it stay admissible (not head-of-line)
+                plan.transfer_waits += 1
+                self._ev(step, "defer", req.rid, reason="transfer_pending",
+                         until_step=req.transfer_until_step)
+                continue
             if len(self.running) >= self.cfg.max_batch:
                 self._ev(step, "defer", req.rid, reason="no_slot")
                 break
@@ -223,7 +238,11 @@ class Scheduler:
         plan = StepPlan()
         self._admit(step, plan)
 
-        plan.decode = [r for r in self.running if r.state == State.DECODE]
+        # a prefill worker never decodes: its DECODE-state requests are
+        # parked awaiting handoff (drained by the ShardedEngine right
+        # after the step) and must not burn the prefill token budget
+        plan.decode = ([r for r in self.running if r.state == State.DECODE]
+                       if self.role.runs_decode else [])
 
         prefilling = [r for r in self.running if r.state == State.PREFILL]
         if self.cfg.policy == "priority":
@@ -248,18 +267,26 @@ class Scheduler:
     def stall_reasons(self) -> dict[int, tuple[str, str]]:
         """rid -> (state, last recorded stall reason) for every stuck
         request — queued AND swapped alike.  The reason is the most
-        recent ``defer`` reason (no_slot / token_budget / no_blocks) or
-        ``swap_lost`` trace event for that request, so a stalled
-        ``Engine.run()`` can report WHY each request cannot make
-        progress instead of blaming the block pool unconditionally."""
+        recent ``defer`` reason (no_slot / token_budget / no_blocks /
+        transfer_pending — a request still streaming in over the
+        modeled prefill->decode link is its own distinct reason, not a
+        generic defer) or ``swap_lost`` trace event for that request,
+        so a stalled ``Engine.run()`` can report WHY each request
+        cannot make progress instead of blaming the block pool
+        unconditionally.  On a prefill worker, DECODE-state requests
+        parked for export surface as ``awaiting_handoff``."""
         last: dict[int, str] = {}
         for e in self.trace:
             if e["event"] == "defer":
                 last[e["rid"]] = e["reason"]
             elif e["event"] == "swap_lost":
                 last[e["rid"]] = "swap_lost"
-        return {r.rid: (r.state.value, last.get(r.rid, "never_considered"))
-                for r in self.queue}
+        out = {r.rid: (r.state.value, last.get(r.rid, "never_considered"))
+               for r in self.queue}
+        if not self.role.runs_decode:
+            out.update({r.rid: (r.state.value, "awaiting_handoff")
+                        for r in self.running if r.state == State.DECODE})
+        return out
 
     # ------------------------------------------------------------- lifecycle
 

@@ -32,15 +32,30 @@ placement plane:
     sampling keys are a pure function of (seed, position), every
     rescued request finishes token-identically.
 
+Disaggregated roles (serving/roles.py): ``roles=["prefill", "decode",
+...]`` (or a ``"P:D"`` spec) specializes shards.  Fresh prompts place
+on the prefill shard with the shallowest PREFILL QUEUE (pending prompt
+tokens), finished prompts stream to the decode shard with the least
+committed-token load over the same swap-to-peer path migration uses
+(``_handoff``), and the destination's scheduler parks each arrival for
+the modeled link transfer (``transfer_pending``).  Every handoff emits
+paired ``handoff_out``/``handoff_in`` spans (trace schema v3) carrying
+bytes moved and the modeled ``transfer_s``, so the replayer prices the
+transfer stage explicitly.  A dead prefill shard's in-flight prompts
+requeue on survivors through the same ``shard_lost`` rescue as any
+other shard — and because sampling keys are pure (seed, position)
+functions, any topology stays token-identical to the mixed oracle.
+
 Per-shard tracing/stats: each shard's tracer emits its own meta (with
-``shard``/``n_shards``, trace schema v2) and step records, and
-``stats()`` reports per-shard decode tokens/s next to the aggregate —
-each shard's rate over ITS OWN stepped wall time, which is what N
-hosts stepping concurrently would each sustain.
+``shard``/``n_shards``/``role``, trace schema v3) and step records,
+and ``stats()`` reports per-shard decode tokens/s next to the
+aggregate — each shard's rate over ITS OWN stepped wall time, which is
+what N hosts stepping concurrently would each sustain.
 """
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 import time
 
 import jax
@@ -49,6 +64,7 @@ import numpy as np
 from repro.dist import sharding as S
 from repro.dist.fault import HeartbeatMonitor
 from repro.layers import common as C
+from repro.serving import roles as R
 from repro.serving.engine import Engine, EngineConfig, nearest_rank
 from repro.serving.request import State
 from repro.serving.sampling import SamplingParams
@@ -59,12 +75,21 @@ class ShardedEngine:
 
     def __init__(self, params, cfg, ecfg: EngineConfig, n_shards: int, *,
                  meshes=None, rules: dict | None = None,
-                 dead_after: float = 60.0):
+                 dead_after: float = 60.0,
+                 roles: list[str] | str | None = None):
         if n_shards < 1:
             raise ValueError(f"n_shards must be >= 1, got {n_shards}")
         self.cfg = cfg
         self.ecfg = ecfg
         self.n_shards = n_shards
+        # worker role per shard (serving/roles.py): default all-mixed —
+        # byte-for-byte today's behavior and the correctness oracle
+        if roles is None:
+            roles = [ecfg.role] * n_shards
+        elif isinstance(roles, str):
+            roles = R.parse_roles(roles, n_shards)
+        R.validate_roles(list(roles), n_shards)
+        self.roles = list(roles)
         self.meshes = meshes if meshes is not None \
             else S.shard_meshes(n_shards)
         if len(self.meshes) != n_shards:
@@ -74,23 +99,32 @@ class ShardedEngine:
         self.devices = [m.devices.flat[0] for m in self.meshes]
         self.engines: list[Engine] = []
         for i in range(n_shards):
+            ecfg_i = (ecfg if self.roles[i] == ecfg.role
+                      else dataclasses.replace(ecfg, role=self.roles[i]))
             with self._on_shard_raw(i):
                 # params pinned per shard: committed inputs then keep
                 # every jit execution on that shard's device, and each
                 # Engine's per-instance jit closures give each shard
                 # its own compile cache
                 p_i = jax.device_put(params, self.devices[i])
-                eng = Engine(p_i, cfg, ecfg)
+                eng = Engine(p_i, cfg, ecfg_i)
             eng.shard = i
             eng.n_shards = n_shards
             self.engines.append(eng)
         self.alive: list[int] = list(range(n_shards))
         self.monitor = HeartbeatMonitor(n_shards, dead_after)
+        # straggler medians compare within a role class: prefill steps
+        # are chunk-sized and legitimately slower than decode steps
+        self.monitor.set_groups(dict(enumerate(self.roles)))
         self.requests = {}           # global rid -> Request (survives
         self.shard_of: dict[int, int] = {}   # its shard's death)
         self._next_rid = 0
         self.migrations = 0          # live-request moves between shards
         self.requeued_lost = 0       # rescued with device state gone
+        # prefill->decode handoff plane accounting
+        self.handoffs = 0
+        self.handoff_bytes = 0
+        self._next_handoff_id = 0
 
     # ----------------------------------------------------------- context
 
@@ -113,11 +147,40 @@ class ShardedEngine:
         return sum(r.total_tokens for r in self.engines[i].requests.values()
                    if r.state != State.FINISHED)
 
+    def prefill_depth(self, i: int) -> int:
+        """Prefill queue depth: prompt tokens still to compute across
+        the shard's unfinished requests — the load metric fresh prompts
+        balance on (a decode shard's committed tokens say nothing about
+        how long a NEW prompt waits behind its prefill queue)."""
+        return sum(max(r.prompt_len - r.pos, 0)
+                   for r in self.engines[i].requests.values()
+                   if r.state not in (State.FINISHED, State.DECODE))
+
+    def _alive_roles(self, pred) -> list[int]:
+        return [i for i in self.alive if pred(R.get_role(self.roles[i]))]
+
     def _place(self, exclude: int | None = None) -> int:
-        cands = [i for i in self.alive if i != exclude]
+        """Least-loaded alive DECODE-CAPABLE shard: the placement for
+        anything past its prompt (handoffs, migration, decode rescue).
+        With homogeneous mixed roles this is every shard — exactly the
+        pre-role behavior."""
+        cands = [i for i in self._alive_roles(lambda r: r.runs_decode)
+                 if i != exclude]
         if not cands:
-            raise RuntimeError("no alive shard to place on")
+            raise RuntimeError("no alive decode-capable shard to place on")
         return min(cands, key=lambda i: (self.shard_load(i), i))
+
+    def _place_fresh(self) -> int:
+        """Placement for a request that still needs its prompt
+        computed: the shallowest prefill-role shard when one is alive
+        (prefill queue depth, not committed tokens), else the ordinary
+        decode-capable least-loaded shard — decode shards run the full
+        datapath, so losing every prefill shard degrades to the mixed
+        topology instead of wedging."""
+        prefill = self._alive_roles(lambda r: r.hands_off)
+        if prefill:
+            return min(prefill, key=lambda i: (self.prefill_depth(i), i))
+        return self._place()
 
     # --------------------------------------------------------------- API
 
@@ -127,7 +190,7 @@ class ShardedEngine:
         """Place a request on the least-loaded alive shard (or a pinned
         one) under a GLOBAL rid space."""
         if shard is None:
-            shard = self._place()
+            shard = self._place_fresh()
         elif shard not in self.alive:
             raise ValueError(f"shard {shard} is not alive")
         rid = self._next_rid
@@ -153,6 +216,11 @@ class ShardedEngine:
                 progressed = eng.step() or progressed
             self.monitor.beat(i, time.monotonic(),
                               time.perf_counter() - t0)
+            # drain completed prefills to decode shards immediately:
+            # the handoff is part of the same simulated step
+            while eng.handoff_ready:
+                self._handoff(i, eng.handoff_ready.pop(0))
+                progressed = True
         return progressed
 
     @property
@@ -206,28 +274,66 @@ class ShardedEngine:
         self.migrations += 1
         return dst
 
+    def _handoff(self, src: int, rid: int) -> int:
+        """Stream a completed prefill from shard ``src`` to a decode
+        shard: the same content-hash swap-to-peer serialization
+        ``migrate`` uses (blocks/snapshots the destination already
+        holds never cross the link), plus the modeled transfer — the
+        destination parks the request for
+        ``transfer_steps_overlap(bytes)`` of its own decode steps
+        (``transfer_pending`` admission gate), and both sides emit a
+        ``handoff_out``/``handoff_in`` span pair sharing a
+        ``handoff_id`` so the trace viewer can draw the flow arrow."""
+        dst = self._place()
+        dst_eng = self.engines[dst]
+        hid = self._next_handoff_id
+        self._next_handoff_id += 1
+        with self._on_shard(src) as se, \
+                se.tracer.span("handoff_out", rid, handoff_id=hid,
+                               peer=dst) as sp:
+            req = se.export_request(rid, peer=dst_eng)
+            n_bytes = R.host_bytes(req)
+            sp.extra["bytes"] = n_bytes
+        transfer_s = dst_eng.cost_model.transfer_latency_s(n_bytes)
+        req.transfer_steps = dst_eng.cost_model.transfer_steps_overlap(
+            n_bytes)
+        with self._on_shard(dst), \
+                dst_eng.tracer.span("handoff_in", rid, handoff_id=hid,
+                                    peer=src, bytes=n_bytes,
+                                    transfer_s=transfer_s):
+            dst_eng.adopt_request(req)
+        self.shard_of[rid] = dst
+        self.handoffs += 1
+        self.handoff_bytes += n_bytes
+        return dst
+
     def rebalance(self, max_moves: int = 1) -> int:
         """Move up to ``max_moves`` QUEUED requests from the most- to
         the least-loaded shard when the gap exceeds one request's
         footprint.  Queued-only: moving waiting work is free (no state
         crosses shards), which keeps a burst submitted to one shard
-        from serializing behind it."""
+        from serializing behind it.  Role-aware: moves stay within a
+        role class (prefill shards trade fresh prompts, decode-capable
+        shards trade decode work) so rebalancing never routes a prompt
+        where the placement policy would not."""
         moved = 0
-        for _ in range(max_moves):
-            if len(self.alive) < 2:
-                break
-            hi = max(self.alive, key=self.shard_load)
-            lo = min(self.alive, key=lambda i: (self.shard_load(i), i))
-            queued = [r for r in self.engines[hi].scheduler.queue
-                      if r.state == State.QUEUED]
-            if hi == lo or not queued:
-                break
-            victim = max(queued, key=lambda r: r._order)   # youngest
-            if self.shard_load(hi) - self.shard_load(lo) \
-                    < victim.total_tokens:
-                break
-            self.migrate(victim.rid, lo)
-            moved += 1
+        groups = [g for g in (self._alive_roles(lambda r: r.hands_off),
+                              self._alive_roles(lambda r: r.runs_decode))
+                  if len(g) >= 2]
+        for group in groups:
+            while moved < max_moves:
+                hi = max(group, key=self.shard_load)
+                lo = min(group, key=lambda i: (self.shard_load(i), i))
+                queued = [r for r in self.engines[hi].scheduler.queue
+                          if r.state == State.QUEUED]
+                if hi == lo or not queued:
+                    break
+                victim = max(queued, key=lambda r: r._order)   # youngest
+                if self.shard_load(hi) - self.shard_load(lo) \
+                        < victim.total_tokens:
+                    break
+                self.migrate(victim.rid, lo)
+                moved += 1
         return moved
 
     # ------------------------------------------------------------- fault
@@ -241,16 +347,26 @@ class ShardedEngine:
         self.alive.remove(i)
         if not self.alive:
             raise RuntimeError("last shard killed — nothing to rescue onto")
+        if not self._alive_roles(lambda r: r.runs_decode):
+            raise RuntimeError(
+                "last decode-capable shard killed — the surviving "
+                "prefill shards can never finish a request")
         eng = self.engines[i]
         for rid, req in list(eng.requests.items()):
             if req.state == State.FINISHED:
                 continue             # output already committed host-side
-            dst = self._place()
             # SWAPPED state lives in host buffers and re-admits on the
             # survivor (missing hash chains degrade to swap_lost
             # recompute inside _admit); anything still on the dead
-            # device is recomputed from scratch
+            # device is recomputed from scratch.  Role-aware rescue: a
+            # request that still needs prompt compute (including every
+            # lost one — recompute starts at pos 0) requeues through
+            # the fresh-prompt placement, so a dead PREFILL shard's
+            # in-flight prompts land on the surviving prefill shards;
+            # swapped mid-decode state re-admits on a decode shard.
             lost = req.state != State.SWAPPED
+            dst = (self._place_fresh() if lost or req.pos < req.prompt_len
+                   else self._place())
             with self._on_shard(dst) as de:
                 de.adopt_request(req, lost=lost)
             self.shard_of[rid] = dst
@@ -259,6 +375,7 @@ class ShardedEngine:
         eng.requests.clear()
         eng.scheduler.queue.clear()
         eng.scheduler.running.clear()
+        eng.handoff_ready.clear()
 
     def reap(self, now: float | None = None) -> list[int]:
         """Kill every shard the heartbeat monitor declares dead."""
@@ -273,7 +390,8 @@ class ShardedEngine:
     def start_trace(self, prefix: str | None = None, *, ring: int = 4096,
                     capture_logits: bool = False):
         """Per-shard traces: ``{prefix}.shard{i}.jsonl`` each with its
-        own schema-v2 meta record carrying the shard id."""
+        own schema-v3 meta record carrying the shard id and role (the
+        trace viewer merges them into one role-labeled timeline)."""
         out = []
         for i, eng in enumerate(self.engines):
             path = f"{prefix}.shard{i}.jsonl" if prefix else None
@@ -290,6 +408,8 @@ class ShardedEngine:
     def reset_stats(self, *, flush_prefix: bool = False):
         for eng in self.engines:
             eng.reset_stats(flush_prefix=flush_prefix)
+        self.handoffs = 0
+        self.handoff_bytes = 0
 
     def apply_replay_curve(self, curve: dict) -> int:
         """Propagate the modeled verify-chunk break-even to every
@@ -310,6 +430,7 @@ class ShardedEngine:
             rate = eng._decoded / wall if wall else 0.0
             per_shard.append({
                 "shard": i,
+                "role": self.roles[i],
                 "alive": i in self.alive,
                 "finished": sum(1 for r in eng.requests.values()
                                 if r.state == State.FINISHED),
@@ -326,8 +447,18 @@ class ShardedEngine:
                     if r.state == State.FINISHED]
         lat = sorted(r.finish_s - r.submit_s for r in finished
                      if r.finish_s is not None and r.submit_s is not None)
+        # handoff wall time is host-side copy cost; the MODELED link
+        # transfer comes from any decode-capable shard's cost model
+        # (identical link_gbps across the topology)
+        decode_idx = self._alive_roles(lambda r: r.runs_decode)
+        cm = self.engines[decode_idx[0] if decode_idx else 0].cost_model
+        handoff_wall_s = sum(
+            eng.tracer.span_total("handoff_out")
+            + eng.tracer.span_total("handoff_in")
+            for eng in self.engines)
         return {
             "n_shards": self.n_shards,
+            "roles": list(self.roles),
             "alive_shards": list(self.alive),
             "finished": len(finished),
             "decoded_tokens": sum(p["decoded_tokens"] for p in per_shard),
@@ -337,5 +468,10 @@ class ShardedEngine:
             "p99_latency_s": nearest_rank(lat, 99),
             "migrations": self.migrations,
             "requeued_lost": self.requeued_lost,
+            "handoff": {
+                **cm.handoff_report(handoffs=self.handoffs,
+                                    handoff_bytes=self.handoff_bytes),
+                "host_copy_wall_s": handoff_wall_s,
+            },
             "per_shard": per_shard,
         }

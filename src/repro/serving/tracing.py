@@ -44,7 +44,13 @@ from collections import deque
 # v2: meta carries ``shard``/``n_shards`` and step records carry a
 # ``shard`` field when the engine runs as one shard of a ShardedEngine
 # (see serving/sharded.py); single-engine traces emit shard=None.
-TRACE_SCHEMA_VERSION = 2
+# v3: disaggregated worker roles (serving/roles.py) — meta carries
+# ``role``/``link_gbps``/``t0`` (the tracer's perf_counter anchor, so a
+# merged multi-shard timeline can align clocks), every step record
+# carries ``role``, and prefill->decode handoffs emit paired
+# ``handoff_out``/``handoff_in`` span records with ``handoff_id``,
+# ``bytes``, ``peer``, and the modeled ``transfer_s``.
+TRACE_SCHEMA_VERSION = 3
 
 # record types a valid trace may contain (schema checks + exporter)
 RECORD_TYPES = ("meta", "step", "request", "span")

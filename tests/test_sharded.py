@@ -2,8 +2,9 @@
 balance, token-identical differentials at 2 and 4 shards, swap-to-peer
 migration (including content-hash re-adoption of prefixes the
 destination already holds), shard-loss rescue surfacing ``swap_lost``,
-the replay-curve verify-chunk cap (spec_chunk_cap), schema-v2 per-shard
-trace fields, and heartbeat-driven reaping.
+the replay-curve verify-chunk cap (spec_chunk_cap), schema-v3 per-shard
+trace fields, and heartbeat-driven reaping.  Disaggregated prefill/
+decode role topologies are covered in tests/test_roles.py.
 
 All tests run on a single physical device: ``shard_meshes`` tiles the
 device list round-robin, so every shard still owns a distinct Mesh and
@@ -153,6 +154,40 @@ def test_migrate_peer_readopts_shared_prefix(bnn_cfg, bnn_params):
     np.testing.assert_array_equal(out[rb], want[0])
 
 
+def test_migrate_with_spec_draft_in_flight(bnn_cfg, bnn_params):
+    """Migrating a request mid-speculation: the victim's latest verify
+    step wrote draft tokens optimistically past its committed position
+    and rolled the rejected suffix back, so export must serialize the
+    pos-consistent state only.  The destination resumes drafting and
+    the tokens match the no-migration spec oracle exactly."""
+    prompts = _prompts(bnn_cfg, [8, 4, 8], seed=23)
+    max_news = [12, 8, 8]
+    want = _reference(bnn_cfg, bnn_params, prompts, max_news, spec_k=3)
+
+    se = _sharded(bnn_cfg, bnn_params, 2, spec_k=3)
+    rids = [se.submit(p, m) for p, m in zip(prompts, max_news)]
+    victim = rids[0]
+    # step until the victim is mid-decode AND its shard has actually
+    # drafted: prompt-lookup returns empty until the sequence grows a
+    # repeated n-gram, and the engine falls back to plain decode steps
+    # (no draft counters) on empty-draft rounds
+    req = se.requests[victim]
+    while not (req.state == State.DECODE and len(req.out) > 1
+               and se.engines[se.shard_of[victim]]._draft_tokens > 0):
+        assert not req.done
+        se.step()
+    src = se.shard_of[victim]
+    assert se.engines[src]._draft_tokens > 0      # drafts actually flew
+    dst = se.migrate(victim)
+    assert dst != src and se.shard_of[victim] == dst
+
+    out = se.run()
+    for rid, w in zip(rids, want):
+        np.testing.assert_array_equal(out[rid], w)
+    # speculation continued on the destination after adoption
+    assert se.engines[dst]._spec_rows > 0
+
+
 def test_rebalance_moves_queued_only(bnn_cfg, bnn_params):
     se = _sharded(bnn_cfg, bnn_params, 2)
     prompts = _prompts(bnn_cfg, [4, 4, 4], seed=9)
@@ -293,20 +328,23 @@ def test_sharded_apply_replay_curve_propagates(bnn_cfg, bnn_params):
 
 # ----------------------------------------------------- per-shard traces
 
-def test_trace_schema_v2_per_shard_fields(bnn_cfg, bnn_params, tmp_path):
+def test_trace_schema_v3_per_shard_fields(bnn_cfg, bnn_params, tmp_path):
     se = _sharded(bnn_cfg, bnn_params, 2)
     prefix = str(tmp_path / "trace")
     se.start_trace(prefix)
     rids = [se.submit(p, 6) for p in _prompts(bnn_cfg, [4, 4], seed=19)]
     se.run()
     se.stop_trace()
-    assert TRACE_SCHEMA_VERSION == 2
+    assert TRACE_SCHEMA_VERSION == 3
     for i in range(2):
         records = read_trace(f"{prefix}.shard{i}.jsonl")
         validate_trace(records)
         meta = records[0]
-        assert meta["schema"] == 2
+        assert meta["schema"] == 3
         assert meta["shard"] == i and meta["n_shards"] == 2
+        # v3: worker role + clock anchor in meta, role on every step
+        assert meta["role"] == "mixed" and "t0" in meta
         steps = [r for r in records if r["type"] == "step"]
         assert steps and all(r["shard"] == i for r in steps)
+        assert all(r["role"] == "mixed" for r in steps)
     assert len(rids) == 2

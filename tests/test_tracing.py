@@ -262,7 +262,8 @@ def test_bench_json_schema_gate(tmp_path):
         sys.path.pop(0)
     row = {"arch": "bnn-lm-100m", "decode_tokens_per_s": 1.0,
            "total_tokens_per_s": 2.0, "p50_latency_s": 0.1,
-           "p99_latency_s": 0.2, "modeled_tokens_per_s": 1e6,
+           "p99_latency_s": 0.2, "p50_first_token_s": 0.05,
+           "p99_first_token_s": 0.08, "modeled_tokens_per_s": 1e6,
            "replay": {"schema_version": 1, "simulated_tokens_per_s": 1e6,
                       "simulated_fps": 10.0, "analytic_s": 1.0,
                       "simulated_s": 0.5}}
@@ -280,6 +281,24 @@ def test_bench_json_schema_gate(tmp_path):
     assert any("p99_latency_s" in p for p in problems)
     json.dump({"schema_version": 999}, open(bad_path, "w"))
     assert check_bench_json(bad_path)
+
+    # disaggregated rows (--roles P:D) must carry the handoff report
+    # and a passing token-identity verdict
+    dis = dict(row, disaggregated=True)
+    json.dump(dict(doc, rows=[dis]), open(bad_path, "w"))
+    problems = check_bench_json(bad_path)
+    assert any("roles" in p for p in problems)
+    assert any("handoff" in p for p in problems)
+    dis.update(roles=["prefill", "decode"],
+               token_identical_to_mixed=True,
+               handoff={"handoffs": 1, "handoff_bytes": 10,
+                        "link_gbps": 100.0, "modeled_transfer_s": 1e-6,
+                        "modeled_transfer_ms_per_handoff": 1e-3})
+    json.dump(dict(doc, rows=[dis]), open(bad_path, "w"))
+    assert check_bench_json(bad_path) == []
+    dis["token_identical_to_mixed"] = False
+    json.dump(dict(doc, rows=[dis]), open(bad_path, "w"))
+    assert any("diverged" in p for p in check_bench_json(bad_path))
 
 
 # ------------------------------------- jamba hybrid differential
