@@ -22,6 +22,12 @@ family — paged-KV (dense GQA), recurrent slots (mamba2), paged latents
     skipped-prefill credit) — mapped for every family, incl. SSD chunk
     matmuls and MLA latent projections
 
+--slo adds a per-arch scheduler-policy comparison row: one mixed
+latency+throughput+scoring trace run under the slo policy, under fcfs,
+and as a scoring-only baseline, measured in engine steps so the
+--require-slo CI gate (latency-class p99 first-token beats fcfs;
+scoring retains >= 90% of its isolated throughput) is deterministic.
+
 With --trace DIR each arch's measured window is recorded to
 ``DIR/trace_<arch>.jsonl`` (schema: docs/observability.md); with
 --replay-photonic the recorded steps are re-priced through the
@@ -52,7 +58,11 @@ from repro.serving import (Engine, EngineConfig, SamplingParams,
                            ShardedEngine, layer_layouts, nearest_rank,
                            replay_trace)
 
-BENCH_SCHEMA_VERSION = 2
+# v3: adds slo-policy comparison rows (--slo / --require-slo) — mixed
+# latency+throughput+scoring trace run under slo vs fcfs vs a
+# scoring-only baseline, per-class first-token percentiles in engine
+# steps (deterministic), and the scoring-throughput retention ratio
+BENCH_SCHEMA_VERSION = 3
 
 # BENCH_serving.json contract (CI fails the smoke job on violation)
 BENCH_REQUIRED_KEYS = ("schema_version", "bench", "params", "rows")
@@ -71,6 +81,19 @@ BENCH_REQUIRED_ROLE_KEYS = ("roles", "handoff", "token_identical_to_mixed")
 BENCH_REQUIRED_HANDOFF_KEYS = ("handoffs", "handoff_bytes", "link_gbps",
                                "modeled_transfer_s",
                                "modeled_transfer_ms_per_handoff")
+# slo comparison rows (--slo) replace the standard row columns with the
+# policy A/B: per-class first-token percentiles in ENGINE STEPS
+# (wall-free, so the CI gate is deterministic) plus the scoring
+# throughput retention vs a scoring-only run of the same engine
+BENCH_REQUIRED_SLO_KEYS = ("arch", "slo", "tenants", "classes",
+                           "slo_latency_p50_first_token_steps",
+                           "slo_latency_p99_first_token_steps",
+                           "fcfs_latency_p50_first_token_steps",
+                           "fcfs_latency_p99_first_token_steps",
+                           "scoring_tokens_per_step_mixed",
+                           "scoring_tokens_per_step_only",
+                           "scoring_retention", "scored_tokens",
+                           "modeled_scoring_tokens_per_s")
 
 # one row per mixer family: paged KV, slot (ssm), paged latent (mla),
 # ring buffer (sliding window), hybrid (slots + paged KV per layer)
@@ -382,6 +405,116 @@ def _sharded_row(arch: str, eng, n_requests: int, wall: float, lats,
     }
 
 
+def bench_slo(arch: str, *, smoke: bool, prompt_len: int, gen: int,
+              seed: int = 0, precision: str = "bnn",
+              accelerator: str = "OXBNN_50") -> dict:
+    """SLO-policy A/B on one mixed trace: the same closed-loop workload
+    — a bulk generation burst (throughput class, tenant budget capping
+    it to one concurrent request), a batch of teacher-forced scoring
+    requests (throughput class), and short interactive requests
+    (latency class), submitted in that order so arrival order is the
+    latency class's worst case — runs once under ``slo`` and once under
+    ``fcfs``, plus a scoring-only baseline.
+
+    Everything is measured in ENGINE STEPS (first_token_step /
+    finish_step request marks), not wall-clock: greedy decoding makes
+    the step sequence deterministic, so the --require-slo CI gate never
+    flakes on machine speed.  Reported: per-class first-token p50/p99
+    under both policies, and scoring throughput (scored tokens per step
+    over the scoring span, first admit -> last finish) in the mixed run
+    vs the scoring-only run — the backfill-retention figure."""
+    cfg = configs.get_config(arch)
+    if smoke:
+        cfg = reduced(cfg)
+    cfg = cfg.replace(precision=precision)
+    params, _ = M.init(jax.random.PRNGKey(seed), cfg)
+
+    chunk = min(16, prompt_len)
+    n_bulk, n_score, n_lat = 3, 4, 3
+    bulk_gen = 3 * gen                     # long enough to hog fcfs slots
+    lat_gen = max(2, gen // 2)             # short interactive answers
+    score_len = 6 * chunk                  # several chunks per pass
+    max_len = max(score_len, prompt_len + bulk_gen)
+    bulk_budget = prompt_len + bulk_gen + lat_gen // 2   # 1 concurrent
+    tenants = (f"bulk=throughput:{bulk_budget},"
+               f"score=throughput:0,web=latency:0")
+
+    rng = np.random.default_rng(seed)
+    bulk_prompts = rng.integers(0, cfg.vocab, (n_bulk, prompt_len),
+                                dtype=np.int32)
+    score_prompts = rng.integers(0, cfg.vocab, (n_score, score_len),
+                                 dtype=np.int32)
+    lat_prompts = rng.integers(0, cfg.vocab, (n_lat, prompt_len),
+                               dtype=np.int32)
+
+    bs = max(4, chunk // 2)
+
+    def run(policy: str, scoring_only: bool):
+        ecfg = EngineConfig(
+            block_size=bs,
+            num_blocks=1 + 4 * (-(-max_len // bs) + 1),
+            max_batch=2, prefill_chunk=chunk, max_model_len=max_len,
+            accelerator=accelerator, prefix_cache=False,
+            policy=policy, tenants=tenants)
+        eng = Engine(params, cfg, ecfg)
+        rids: dict[str, list[int]] = {"bulk": [], "score": [], "web": []}
+        t0 = time.perf_counter()
+        if not scoring_only:
+            for p in bulk_prompts:
+                rids["bulk"].append(eng.submit(p, bulk_gen, tenant="bulk"))
+        for p in score_prompts:
+            rids["score"].append(eng.submit(p, 0, tenant="score",
+                                            score=True))
+        if not scoring_only:
+            for p in lat_prompts:
+                rids["web"].append(eng.submit(p, lat_gen, tenant="web"))
+        eng.run()
+        return eng, rids, time.perf_counter() - t0
+
+    def ft_steps(eng, rids):
+        return sorted(eng.requests[r].first_token_step
+                      - eng.requests[r].submit_step for r in rids)
+
+    def score_tps(eng, rids):
+        reqs = [eng.requests[r] for r in rids]
+        span = (max(r.finish_step for r in reqs)
+                - min(r.admit_step for r in reqs) + 1)
+        return sum(len(r.logprobs) for r in reqs) / max(span, 1), span
+
+    slo_eng, slo_rids, slo_wall = run("slo", scoring_only=False)
+    fcfs_eng, fcfs_rids, fcfs_wall = run("fcfs", scoring_only=False)
+    only_eng, only_rids, only_wall = run("slo", scoring_only=True)
+
+    slo_lat = ft_steps(slo_eng, slo_rids["web"])
+    fcfs_lat = ft_steps(fcfs_eng, fcfs_rids["web"])
+    mixed_tps, mixed_span = score_tps(slo_eng, slo_rids["score"])
+    only_tps, only_span = score_tps(only_eng, only_rids["score"])
+    st = slo_eng.stats()
+    return {
+        "arch": arch, "slo": True, "tenants": tenants,
+        "classes": {"latency": n_lat, "throughput": n_bulk,
+                    "scoring": n_score},
+        "slo_latency_p50_first_token_steps": nearest_rank(slo_lat, 50),
+        "slo_latency_p99_first_token_steps": nearest_rank(slo_lat, 99),
+        "fcfs_latency_p50_first_token_steps": nearest_rank(fcfs_lat, 50),
+        "fcfs_latency_p99_first_token_steps": nearest_rank(fcfs_lat, 99),
+        "slo_throughput_p99_first_token_steps": nearest_rank(
+            ft_steps(slo_eng, slo_rids["bulk"]), 99),
+        "fcfs_throughput_p99_first_token_steps": nearest_rank(
+            ft_steps(fcfs_eng, fcfs_rids["bulk"]), 99),
+        "scoring_tokens_per_step_mixed": mixed_tps,
+        "scoring_tokens_per_step_only": only_tps,
+        "scoring_retention": mixed_tps / only_tps if only_tps else 0.0,
+        "scoring_span_steps": {"mixed": mixed_span, "only": only_span},
+        "scored_tokens": st["scoring"]["scored_tokens"],
+        "score_passes": st["scoring"]["score_passes"],
+        "modeled_scoring_tokens_per_s":
+            st["photonic"]["modeled_scoring_tokens_per_s"],
+        "wall_s": {"slo": slo_wall, "fcfs": fcfs_wall,
+                   "scoring_only": only_wall},
+    }
+
+
 def write_bench_json(path: str, rows: list[dict], params: dict):
     """Persist the run as schema-versioned BENCH_serving.json."""
     doc = {
@@ -415,6 +548,14 @@ def check_bench_json(path: str) -> list[str]:
     if not rows:
         problems.append("no rows")
     for i, row in enumerate(rows):
+        if row.get("slo"):
+            # slo comparison rows carry the policy A/B columns instead
+            # of the standard open-loop row contract
+            for k in BENCH_REQUIRED_SLO_KEYS:
+                if k not in row:
+                    problems.append(
+                        f"row {i} ({row.get('arch')}): slo row missing {k!r}")
+            continue
         for k in BENCH_REQUIRED_ROW_KEYS:
             if k not in row:
                 problems.append(f"row {i} ({row.get('arch')}): missing {k!r}")
@@ -519,6 +660,16 @@ def main():
                          "nondecreasing in the shard count (2%% "
                          "tolerance) and the 2-shard factor over "
                          "1 shard must reach X")
+    ap.add_argument("--slo", action="store_true",
+                    help="add a per-arch slo-policy comparison row: a "
+                         "mixed latency+throughput+scoring trace run "
+                         "under slo vs fcfs vs scoring-only (steps-"
+                         "based, deterministic)")
+    ap.add_argument("--require-slo", action="store_true",
+                    help="CI gate (implies --slo): the slo policy's "
+                         "latency-class p99 first-token must beat "
+                         "fcfs's, and mixed-trace scoring throughput "
+                         "must retain >= 90%% of the scoring-only run")
     ap.add_argument("--bench-json", default=None, metavar="PATH",
                     help="persist results as schema-versioned JSON")
     ap.add_argument("--check-json", default=None, metavar="PATH",
@@ -568,6 +719,7 @@ def main():
             for n_sh in shard_counts]
     failures = []
     diverged = []
+    slo_bad = []
     rows = []
     for arch in archs:
       mixed_row = None
@@ -636,10 +788,37 @@ def main():
                     r["snapshot_hits"] == 0
                     or r["skipped_prefill_tokens"] == 0):
             failures.append(arch)
+      if args.slo or args.require_slo:
+        sr = bench_slo(arch, smoke=args.smoke, prompt_len=plen, gen=gen,
+                       precision=args.precision,
+                       accelerator=args.accelerator)
+        rows.append(sr)
+        print(f"[bench] {arch} slo-vs-fcfs: latency-class first-token "
+              f"p50/p99 {sr['slo_latency_p50_first_token_steps']}/"
+              f"{sr['slo_latency_p99_first_token_steps']} steps vs "
+              f"{sr['fcfs_latency_p50_first_token_steps']}/"
+              f"{sr['fcfs_latency_p99_first_token_steps']} | scoring "
+              f"retention {100 * sr['scoring_retention']:.1f}% "
+              f"({sr['scoring_tokens_per_step_mixed']:.1f} vs "
+              f"{sr['scoring_tokens_per_step_only']:.1f} tok/step, "
+              f"{sr['scored_tokens']} scored) | modeled scoring "
+              f"{sr['modeled_scoring_tokens_per_s']:.0f} tok/s")
+        if args.require_slo:
+            if not (sr["slo_latency_p99_first_token_steps"]
+                    < sr["fcfs_latency_p99_first_token_steps"]):
+                slo_bad.append(
+                    f"{arch}: slo latency p99 first-token "
+                    f"{sr['slo_latency_p99_first_token_steps']} steps "
+                    f">= fcfs {sr['fcfs_latency_p99_first_token_steps']}")
+            if sr["scoring_retention"] < 0.9:
+                slo_bad.append(
+                    f"{arch}: mixed-trace scoring retained only "
+                    f"{100 * sr['scoring_retention']:.1f}% of the "
+                    "scoring-only throughput (< 90%)")
     if args.replay_photonic:
         from repro.serving import format_report
         for r in rows:
-            if r["replay"] is not None:
+            if r.get("replay") is not None:
                 print(format_report(r["replay"]))
             for rep in r.get("replay_per_shard") or []:
                 print(f"[replay] shard {rep.get('shard')}:")
@@ -648,7 +827,8 @@ def main():
         bad = []
         for arch in archs:
             series = sorted((r["shards"], r["aggregate_decode_tokens_per_s"])
-                            for r in rows if r["arch"] == arch)
+                            for r in rows
+                            if r["arch"] == arch and not r.get("slo"))
             for (a, ra), (b, rb) in zip(series, series[1:]):
                 if rb < 0.98 * ra:
                     bad.append(f"{arch}: {rb:.1f} tok/s at {b} shards < "
@@ -675,10 +855,14 @@ def main():
                   "shared_frac": args.shared_frac, "spec_k": args.spec_k,
                   "temperature": args.temperature,
                   "replay_photonic": args.replay_photonic,
-                  "shards": shard_counts, "roles": args.roles}
+                  "shards": shard_counts, "roles": args.roles,
+                  "slo": bool(args.slo or args.require_slo)}
         write_bench_json(args.bench_json, rows, params)
         print(f"[bench] wrote {args.bench_json} "
               f"(schema v{BENCH_SCHEMA_VERSION}, {len(rows)} rows)")
+    if slo_bad:
+        raise SystemExit("--require-slo violations:\n  "
+                         + "\n  ".join(slo_bad))
     if diverged:
         raise SystemExit(
             f"--roles: disaggregated tokens diverged from the mixed "

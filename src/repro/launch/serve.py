@@ -20,6 +20,15 @@ steps with (seed, position) PRNG keys; --spec-k enables prompt-lookup
 speculative decoding (multi-token verify on the XNOR path, modeled
 photonic speedup reported next to acceptance rate).
 
+Streaming front-end (--stream): the same engine behind an asyncio
+server loop (serving/frontend.py) — requests join mid-flight, committed
+tokens stream per request (speculative commits arrive as bursts),
+--cancel-after drops one request mid-decode, and --score runs
+teacher-forced logprob/ppl scoring requests alongside generation.
+--tenants "name=class:budget,..." enables the multi-tenant slo
+scheduler policy (latency vs throughput classes, per-tenant token
+budgets — serving/policy.py) and assigns requests round-robin.
+
 Usage (CPU smoke):
   PYTHONPATH=src python -m repro.launch.serve --arch bnn-lm-100m --smoke \
       --batch 4 --prompt-len 16 --gen 16 --precision bnn
@@ -27,6 +36,7 @@ Usage (CPU smoke):
 from __future__ import annotations
 
 import argparse
+import asyncio
 import time
 
 import jax
@@ -39,7 +49,8 @@ from repro.launch.mesh import make_production_mesh, smoke_mesh
 from repro.dist import sharding as S
 from repro.layers import common as C
 from repro.models import transformer as M
-from repro.serving import Engine, EngineConfig, SamplingParams
+from repro.serving import (Engine, EngineConfig, Frontend, SamplingParams,
+                           parse_tenants, tenants_arg)
 
 
 def _setup(arch, smoke, multi_pod, precision, seed):
@@ -94,6 +105,67 @@ def serve_legacy(arch: str, *, smoke: bool = False, multi_pod: bool = False,
         C.clear_sharding_context()
 
 
+def _serve_stream(eng, prompts, gen, sampling, *, tenants, score,
+                  cancel_after, verbose):
+    """Drive the engine through the asyncio front-end.
+
+    Submits every prompt round-robin over the named tenants, consumes
+    each request's committed-token stream concurrently, optionally
+    cancels the LAST request mid-decode after ``cancel_after`` streamed
+    tokens, and runs ``score`` teacher-forced scoring requests
+    alongside.  Returns (rids, {rid: prompt+generated}) with cancelled
+    requests omitted from the dict.
+    """
+    names = list(parse_tenants(tenants)) or ["default"]
+    batch = len(prompts)
+
+    async def go():
+        got: dict[int, list[int]] = {}
+        scored: list[dict] = []
+        async with Frontend(eng) as fe:
+            rids = [fe.submit(np.asarray(prompts[b], np.int32), gen,
+                              sampling=sampling(b),
+                              tenant=names[b % len(names)])
+                    for b in range(batch)]
+            cancel_rid = rids[-1] if cancel_after and rids else None
+
+            async def consume(rid):
+                toks: list[int] = []
+                async for burst in fe.stream(rid):
+                    toks.extend(burst)
+                    if rid == cancel_rid and len(toks) >= cancel_after:
+                        fe.cancel(rid)
+                got[rid] = toks
+
+            async def run_score(i):
+                scored.append(await fe.score(
+                    np.asarray(prompts[i % batch], np.int32),
+                    tenant=names[i % len(names)]))
+
+            await asyncio.gather(*(consume(r) for r in rids),
+                                 *(run_score(i) for i in range(score)))
+        return rids, got, scored
+
+    rids, got, scored = asyncio.run(go())
+    out: dict[int, np.ndarray] = {}
+    for b, rid in enumerate(rids):
+        req = eng.requests[rid]
+        cancelled = req.state.name == "CANCELLED"
+        if verbose:
+            tag = " CANCELLED" if cancelled else ""
+            print(f"[serve:stream] rid={rid} tenant={req.tenant} "
+                  f"class={req.slo_class} streamed={len(got[rid])}{tag}")
+        if not cancelled:
+            out[rid] = np.concatenate(
+                [np.asarray(prompts[b], np.int32),
+                 np.asarray(got[rid], np.int32)])
+    if verbose:
+        for s in scored:
+            print(f"[serve:stream] score rid={s['rid']} "
+                  f"tokens={s['scored_tokens']} ppl={s['ppl']:.3f}")
+    return rids, out
+
+
 def serve(arch: str, *, smoke: bool = False, multi_pod: bool = False,
           batch: int = 4, prompt_len: int = 16, gen: int = 16,
           precision: str | None = None, seed: int = 0,
@@ -108,7 +180,9 @@ def serve(arch: str, *, smoke: bool = False, multi_pod: bool = False,
           attn_impl: str = "auto", bnn_impl: str = "auto",
           trace: str | None = None, replay_photonic: bool = False,
           capture_logits: bool = False, shards: int = 1,
-          roles: str | None = None):
+          roles: str | None = None, policy: str | None = None,
+          tenants: str = "", stream: bool = False, score: int = 0,
+          cancel_after: int = 0):
     """Serve ``batch`` synthetic requests; returns (batch, prompt+gen)
     token ids (prompt prefix included, matching the legacy loop).  With
     stop tokens the generations can end early — the result is then a
@@ -117,7 +191,16 @@ def serve(arch: str, *, smoke: bool = False, multi_pod: bool = False,
     serving/sharded.py); output stays token-identical to 1 shard.
     ``roles`` disaggregates the shards into prefill/decode workers
     ("P:D" counts, e.g. "1:2", or explicit comma names); tokens remain
-    identical to the mixed topology."""
+    identical to the mixed topology.
+
+    ``stream`` drives the same engine through the asyncio front-end:
+    requests stream their committed tokens concurrently, ``score``
+    extra teacher-forced scoring requests run alongside, and
+    ``cancel_after`` cancels one request after that many streamed
+    tokens.  ``tenants`` turns on the slo policy (unless ``policy``
+    says otherwise) and spreads requests round-robin over the named
+    tenants.  Uncancelled streamed output is byte-identical to the
+    batch path for the same flags."""
     if engine == "legacy":
         return serve_legacy(arch, smoke=smoke, multi_pod=multi_pod,
                             batch=batch, prompt_len=prompt_len, gen=gen,
@@ -126,6 +209,8 @@ def serve(arch: str, *, smoke: bool = False, multi_pod: bool = False,
         cfg, params, mesh = _setup(arch, smoke, multi_pod, precision, seed)
         max_len = prompt_len + gen
         bs = block_size or max(8, min(32, prompt_len))
+        if policy is None:
+            policy = "slo" if tenants else "fcfs"
         ecfg = EngineConfig(
             block_size=bs,
             num_blocks=1 + batch * (-(-max_len // bs) + 1),
@@ -137,7 +222,8 @@ def serve(arch: str, *, smoke: bool = False, multi_pod: bool = False,
             preempt_policy=preempt_policy,
             snapshot_slots=snapshot_slots,
             spec_k=spec_k, spec_ngram=spec_ngram,
-            attn_impl=attn_impl, bnn_impl=bnn_impl)
+            attn_impl=attn_impl, bnn_impl=bnn_impl,
+            policy=policy, tenants=tenants_arg(tenants))
         if shards > 1:
             from repro.serving import ShardedEngine
             eng = ShardedEngine(
@@ -150,15 +236,22 @@ def serve(arch: str, *, smoke: bool = False, multi_pod: bool = False,
             eng.start_trace(trace, ring=1 << 16,
                             capture_logits=capture_logits)
         prompts = np.asarray(_prompts(cfg, batch, prompt_len, seed))
-        # temperature speaks for itself (0 == greedy); the ``greedy``
-        # flag only selects the legacy loop's sampling mode above
-        rids = [eng.submit(prompts[b], gen,
-                           sampling=SamplingParams(
-                               temperature=temperature,
-                               top_k=top_k, top_p=top_p,
-                               seed=sampling_seed + b, stop=stop))
-                for b in range(batch)]
-        out = eng.run()
+
+        def _sampling(b):
+            # temperature speaks for itself (0 == greedy); the
+            # ``greedy`` flag only selects the legacy loop's mode above
+            return SamplingParams(temperature=temperature, top_k=top_k,
+                                  top_p=top_p, seed=sampling_seed + b,
+                                  stop=stop)
+
+        if stream:
+            rids, out = _serve_stream(
+                eng, prompts, gen, _sampling, tenants=tenants,
+                score=score, cancel_after=cancel_after, verbose=verbose)
+        else:
+            rids = [eng.submit(prompts[b], gen, sampling=_sampling(b))
+                    for b in range(batch)]
+            out = eng.run()
         stats = eng.stats()
         if trace or replay_photonic:
             shard_records = ([e.tracer.events() for e in eng.engines]
@@ -240,7 +333,7 @@ def serve(arch: str, *, smoke: bool = False, multi_pod: bool = False,
                   f"(effective {ph['modeled_effective_tokens_per_s']:.0f} "
                   f"with pipelined prefill + prefix credit; bottleneck: "
                   f"{ph['bottleneck_stage']})")
-        seqs = [out[r] for r in rids]
+        seqs = [out[r] for r in rids if r in out]   # cancelled omitted
         if len({len(s) for s in seqs}) > 1:      # early stop: ragged
             return seqs
         return np.stack(seqs)
@@ -308,6 +401,24 @@ def main():
                          "workers: 'P:D' counts (e.g. 1:2) or explicit "
                          "comma names (prefill,decode,mixed); must "
                          "cover --shards; default all-mixed")
+    ap.add_argument("--stream", action="store_true",
+                    help="drive the engine through the asyncio "
+                         "front-end: per-request token streams, "
+                         "mid-flight joins, cancellation, scoring")
+    ap.add_argument("--policy", default=None,
+                    choices=["fcfs", "priority", "slo"],
+                    help="scheduler policy (default: slo when "
+                         "--tenants is set, else fcfs)")
+    ap.add_argument("--tenants", default="", metavar="NAME=CLASS:BUDGET",
+                    help="comma-separated tenant spec, e.g. "
+                         "'web=latency:0,bulk=throughput:2048'; "
+                         "requests are assigned round-robin")
+    ap.add_argument("--score", type=int, default=0,
+                    help="teacher-forced scoring requests to run "
+                         "alongside generation (requires --stream)")
+    ap.add_argument("--cancel-after", type=int, default=0,
+                    help="cancel the last request after this many "
+                         "streamed tokens (requires --stream)")
     args = ap.parse_args()
     serve(args.arch, smoke=args.smoke, multi_pod=args.multi_pod,
           batch=args.batch, prompt_len=args.prompt_len, gen=args.gen,
@@ -323,7 +434,9 @@ def main():
           spec_k=args.spec_k, spec_ngram=args.spec_ngram,
           attn_impl=args.attn_impl, bnn_impl=args.bnn_impl,
           trace=args.trace, replay_photonic=args.replay_photonic,
-          shards=args.shards, roles=args.roles)
+          shards=args.shards, roles=args.roles,
+          policy=args.policy, tenants=args.tenants, stream=args.stream,
+          score=args.score, cancel_after=args.cancel_after)
 
 
 if __name__ == "__main__":

@@ -4,6 +4,10 @@ from repro.serving.block_cache import (                             # noqa: F401
     BlockAllocator, BlockKVCache, MixerStateCache, PrefixIndex, chunk_key)
 from repro.serving.cost_model import PhotonicCostModel, gemm_specs  # noqa: F401
 from repro.serving.engine import Engine, EngineConfig, nearest_rank  # noqa: F401
+from repro.serving.frontend import Frontend                         # noqa: F401
+from repro.serving.policy import (                                  # noqa: F401
+    LATENCY, THROUGHPUT, FCFSPolicy, PriorityPolicy, SLOPolicy,
+    SchedulingPolicy, TenantSpec, make_policy, parse_tenants, tenants_arg)
 from repro.serving.sampling import (                                # noqa: F401
     SamplingParams, prompt_lookup_draft, sample_tokens)
 from repro.serving.mixer_state import (                             # noqa: F401

@@ -702,7 +702,24 @@ class MixerStateCache:
         the snapshot depth, the slot side restores that snapshot, and
         the request starts past the matched tokens.  A hybrid with
         snapshots disabled adopts nothing (the slot would still have to
-        be recomputed from position 0)."""
+        be recomputed from position 0).
+
+        Scoring requests adopt nothing either: teacher-forced scoring
+        needs the LOGITS of every prompt position, and an adopted
+        prefix skips exactly those forwards (the blocks hold KV, not
+        logits).  Their freshly prefilled blocks still register into
+        the index for later generation requests to reuse."""
+        if getattr(req, "score", False):
+            if self.ssm is not None and \
+                    not self.ssm.alloc_prompt(req, (0, "", 0), count=False):
+                return False
+            if self.attn is not None and \
+                    not self.attn.alloc_prompt(req, max_match=0):
+                if self.ssm is not None:
+                    self.ssm.release(req)
+                    req.pos = req.skipped_prefill = 0
+                return False
+            return True
         cap = None
         match = (0, "", 0)
         if self.ssm is not None:

@@ -231,6 +231,22 @@ class PhotonicCostModel:
                 committed_tokens * self.token_latency_s / spent,
         }
 
+    def scoring_report(self, *, score_tokens: int,
+                       score_passes: int) -> dict:
+        """Modeled accelerator cost of the teacher-forced scoring
+        workload.  Scoring IS chunked prefill — no decode loop ever
+        runs — so each pass is priced exactly like a prefill pass:
+        chunk tokens through the weight-stationary pipeline plus one
+        fill (``prefill_latency_s``).  Reported separately from the
+        serving totals so a mixed trace can see what the scoring share
+        alone would sustain."""
+        if score_tokens <= 0:
+            return {"modeled_scoring_tokens_per_s": 0.0,
+                    "modeled_scoring_wall_s": 0.0}
+        wall = self.prefill_latency_s(score_tokens, max(score_passes, 1))
+        return {"modeled_scoring_tokens_per_s": score_tokens / wall,
+                "modeled_scoring_wall_s": wall}
+
     def prefill_latency_s(self, n_tokens: int, n_passes: int) -> float:
         """Modeled latency of chunked prefill: n tokens streamed
         through the weight-stationary pipeline in n_passes chunk-sized

@@ -40,6 +40,7 @@ from __future__ import annotations
 
 import math
 import time
+import warnings
 from dataclasses import asdict, dataclass
 
 import jax.numpy as jnp
@@ -75,9 +76,15 @@ class EngineConfig:
     max_batch: int = 8               # decode slots (padded to 2^k buckets)
     prefill_chunk: int = 16
     max_model_len: int = 256         # prompt + generation bound per request
-    policy: str = "fcfs"             # fcfs | priority
-    max_tokens_in_flight: int = 1 << 30
+    policy: str = "fcfs"             # fcfs | priority | slo
+    max_tokens_in_flight: int = 0    # KV-footprint admission budget;
+                                     # 0 = auto (2x the block pool's
+                                     # token capacity — swap headroom
+                                     # without unbounded admission)
     max_batched_tokens: int = 256
+    tenants: str = ""                # slo-policy tenant spec in the
+                                     # canonical "name=class:budget,..."
+                                     # form (policy.tenants_arg)
     accelerator: str = "OXBNN_50"    # photonic cost-model target
     prefix_cache: bool = True        # content-addressed prompt block reuse
     preempt_policy: str = "swap"     # swap | recompute (fallback)
@@ -127,14 +134,33 @@ class Engine:
         self.role = R.get_role(ecfg.role)
         if not self.role.runs_decode:
             self._spec_k = 0
+        # admission token budget: 0 = derive from the block pool (2x
+        # its token capacity — enough oversubscription for swap-based
+        # preemption to matter, but no longer effectively unbounded).
+        # Slot-only stacks have no block pool; their admission is
+        # bounded by max_batch/num_slots instead.
+        mtif = ecfg.max_tokens_in_flight
+        if mtif == 0:
+            a = self.cache.attn
+            mtif = (2 * a.allocator.capacity * ecfg.block_size
+                    if a is not None else 1 << 30)
+        elif mtif >= 1 << 30 and self.cache.attn is not None:
+            warnings.warn(
+                "max_tokens_in_flight >= 1<<30: admission is "
+                "KV-unconstrained — every queued request counts as "
+                "admissible and block pressure is handled purely by "
+                "preemption; pass max_tokens_in_flight=0 to derive a "
+                "bound from the block pool", stacklevel=2)
+        self.max_tokens_in_flight = mtif
         self.scheduler = Scheduler(
             SchedulerConfig(max_batch=ecfg.max_batch,
-                            max_tokens_in_flight=ecfg.max_tokens_in_flight,
+                            max_tokens_in_flight=mtif,
                             max_batched_tokens=ecfg.max_batched_tokens,
                             prefill_chunk=ecfg.prefill_chunk,
                             policy=ecfg.policy,
                             preempt_policy=ecfg.preempt_policy,
-                            decode_cost=1 + self._spec_k),
+                            decode_cost=1 + self._spec_k,
+                            tenants=ecfg.tenants),
             self.cache, tracer=self.tracer, role=self.role)
         # the fused Pallas chain never spills packed activations to
         # HBM; the XLA oracle prices the extra pack pass per GEMM
@@ -165,6 +191,15 @@ class Engine:
         self._draft_tokens = 0
         self._draft_accepted = 0
         self._spec_repairs = 0
+        # scoring workload counters (teacher-forced prefill-only)
+        self._score_tokens = 0           # scored prompt positions
+        self._score_passes = 0           # chunked scoring prefill calls
+        self._score_requests = 0         # finished scoring requests
+        self._cancelled = 0
+        # incremental token-commit callback (streaming front-end):
+        # cb(rid, new_tokens, done) at every commit point — spec-decode
+        # commits surface as bursts.  None = no streaming overhead.
+        self.on_commit = None
         self._has_slots = self.cache.ssm is not None
         # prompts whose prefill completed on a hand-off role, awaiting
         # export to a decode peer (drained by ShardedEngine.step)
@@ -205,8 +240,17 @@ class Engine:
     def submit(self, prompt, max_new: int, *, priority: int = 0,
                arrival_s: float = 0.0,
                sampling: SamplingParams | None = None,
-               rid: int | None = None) -> int:
+               rid: int | None = None, tenant: str = "default",
+               slo_class: str = "", score: bool = False) -> int:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if score:
+            # scoring = chunked teacher-forced prefill only: no decode
+            # loop, so there is no generation budget to reserve
+            max_new = 0
+            if prompt.size < 2:
+                raise ValueError(
+                    "scoring needs >= 2 prompt tokens (each scored "
+                    "position conditions on at least one token)")
         if prompt.size + max_new > self.ecfg.max_model_len:
             raise ValueError(
                 f"request needs {prompt.size + max_new} tokens > "
@@ -222,11 +266,62 @@ class Engine:
         self._next_rid = max(self._next_rid, rid) + 1
         req = Request(rid, prompt, max_new, priority=priority,
                       arrival_s=arrival_s,
-                      sampling=sampling or SamplingParams())
+                      sampling=sampling or SamplingParams(),
+                      tenant=tenant, slo_class=slo_class, score=score)
         req.submit_s = time.perf_counter()
         self.requests[rid] = req
         self.scheduler.submit(req, self.step_count)
         return rid
+
+    def set_commit_callback(self, cb):
+        """Install ``cb(rid, new_tokens, done)``, fired at every token
+        commit: prefill first token, each plain decode token, and
+        speculative commits as whole accepted bursts.  ``new_tokens``
+        only ever contains tokens past the request's delivery watermark
+        — recompute preemption regenerates an identical prefix (seed/
+        position determinism), which is NOT re-delivered, so the
+        concatenated stream is byte-identical to ``run()`` output."""
+        self.on_commit = cb
+
+    def _commit(self, req: Request, done: bool):
+        if self.on_commit is None:
+            return
+        new = req.out[req.streamed:]
+        if new or done:
+            req.streamed = len(req.out)
+            self.on_commit(req.rid, list(new), done)
+
+    def cancel(self, rid: int) -> bool:
+        """First-class cancellation.  Queued requests are dropped;
+        running ones release their blocks/slots through the same cache
+        paths preemption uses; swapped ones just drop their host
+        buffers (``swap_out`` already freed the device blocks).  The
+        request ends in the terminal CANCELLED state with a
+        ``cancelled`` trace event — never counted as a ``swap_lost``
+        or a preemption.  Returns False when rid is unknown or already
+        terminal."""
+        req = self.requests.get(rid)
+        if req is None or req.state in (State.FINISHED, State.CANCELLED):
+            return False
+        sched = self.scheduler
+        if req in sched.running:
+            sched.running.remove(req)
+            self.cache.release(req)
+        elif req in sched.queue:
+            sched.queue.remove(req)
+            if req.state == State.SWAPPED:
+                req.host_kv = None
+                req.host_state = None
+        if rid in self.handoff_ready:
+            self.handoff_ready.remove(rid)
+        req.state = State.CANCELLED
+        req.finish_step = self.step_count
+        req.finish_s = time.perf_counter()
+        self._cancelled += 1
+        sched._ev(self.step_count, "cancelled", rid,
+                  generated=len(req.out))
+        self._commit(req, True)
+        return True
 
     def _counter_marks(self) -> tuple:
         """Cheap cache/scheduler counter snapshot — the step record
@@ -385,6 +480,13 @@ class Engine:
             jnp.asarray([chunk], jnp.int32), jnp.asarray(slots),
             *srows.as_args())
         self.cache.pools = pools
+        if req.score:
+            # teacher-forced scoring: the chunk's logits rows predict
+            # prompt positions pos+1 .. pos+chunk (same capture path
+            # the tracer's capture_logits uses)
+            self._accumulate_score(
+                req, np.asarray(_logits[0, :chunk], np.float32), chunk)
+            self._score_passes += 1
         req.pos += chunk
         self._prefilled += chunk
         self._prefill_calls += 1
@@ -394,11 +496,23 @@ class Engine:
         if self._step_rec is not None:
             info = {"rid": req.rid, "tokens": chunk, "pos": req.pos,
                     "prompt_len": req.prompt_len}
+            if req.score:
+                info["score"] = True
             if self.tracer.capture_logits:
                 info["logits"] = np.asarray(
                     _logits[0, :chunk], np.float32).tolist()
             self._step_rec["prefill"] = info
         if req.pos == req.prompt_len:
+            if req.score:
+                # scoring never decodes: the request finishes straight
+                # out of its last prefill chunk, releasing its state
+                req.first_token_step = step
+                req.first_token_s = time.perf_counter()
+                self._score_requests += 1
+                self.scheduler.finish(step, req)
+                req.finish_s = req.first_token_s
+                self._commit(req, True)
+                return
             req.out.append(int(np.asarray(tok)[0]))
             req.state = State.DECODE
             req.first_token_step = step
@@ -416,6 +530,23 @@ class Engine:
                 self.handoff_ready.append(req.rid)
                 self.scheduler._ev(step, "handoff_ready", req.rid,
                                    pos=req.pos)
+            self._commit(req, req.done)
+
+    def _accumulate_score(self, req: Request, logits: np.ndarray,
+                          chunk: int):
+        """Append log p(prompt[pos+1+j] | prefix) for each scored row
+        of the chunk (row j predicts position pos+j+1; the final row
+        has no target inside the prompt)."""
+        n = min(chunk, req.prompt_len - req.pos - 1)
+        if n <= 0:
+            return
+        rows = logits[:n].astype(np.float64)
+        mx = rows.max(axis=-1)
+        lse = mx + np.log(np.exp(rows - mx[:, None]).sum(axis=-1))
+        tgt = np.asarray(req.prompt[req.pos + 1:req.pos + 1 + n], np.int64)
+        lp = rows[np.arange(n), tgt] - lse
+        req.logprobs.extend(float(x) for x in lp)
+        self._score_tokens += n
 
     @staticmethod
     def _bucket(n: int) -> int:
@@ -483,12 +614,15 @@ class Engine:
             self._step_rec["decode"] = info
         now = time.perf_counter()
         for i, r in enumerate(ready):
+            if r.state is not State.DECODE:
+                continue    # cancelled mid-loop by a commit callback
             r.pos += 1
             r.out.append(int(next_tok[i]))
             self._decoded += 1
             if r.done:
                 self.scheduler.finish(step, r)
                 r.finish_s = now
+            self._commit(r, r.done)
 
     # ------------------------------------------------- speculative decode
 
@@ -557,6 +691,8 @@ class Engine:
         now = time.perf_counter()
         committed_total = 0
         for i, r in enumerate(ready):
+            if r.state is not State.DECODE:
+                continue    # cancelled mid-loop by a commit callback
             m = int(n_commit[i])
             self._verify_tokens += int(n_valid[i])
             self._draft_tokens += int(n_valid[i]) - 1
@@ -579,6 +715,9 @@ class Engine:
             if r.done:
                 self.scheduler.finish(step, r)
                 r.finish_s = now
+            # the whole accepted burst surfaces as ONE commit — the
+            # streaming contract for speculative decoding
+            self._commit(r, r.done)
         self._spec_committed += committed_total
         self._decode_produced += committed_total
         self.scheduler._ev(step, "spec_decode", None,
@@ -612,6 +751,8 @@ class Engine:
         self._verify_tokens = self._spec_committed = 0
         self._draft_tokens = self._draft_accepted = 0
         self._spec_repairs = 0
+        self._score_tokens = self._score_passes = 0
+        self._score_requests = self._cancelled = 0
         self.cache.reset_stats(flush_prefix=flush_prefix)
 
     def stats(self) -> dict:
@@ -645,6 +786,13 @@ class Engine:
             "p99_latency_s": nearest_rank(lat, 99),
             "max_concurrent_decode": self._max_concurrent,
             "preemptions": sum(r.preemptions for r in self.requests.values()),
+            "cancelled": self._cancelled,
+            "scoring": {
+                "requests": self._score_requests,
+                "scored_tokens": self._score_tokens,
+                "score_passes": self._score_passes,
+            },
+            "tenants": self.scheduler.tenant_report(),
             "speculative": self._spec_section(),
             "prefix_cache": prefix,
             "swap": c.swap_section(),
@@ -661,6 +809,9 @@ class Engine:
                     verify_passes=self._spec_rows,
                     verify_tokens=self._verify_tokens,
                     committed_tokens=self._spec_committed),
+                **self.cost_model.scoring_report(
+                    score_tokens=self._score_tokens,
+                    score_passes=self._score_passes),
             },
         }
 

@@ -28,6 +28,8 @@ class State(enum.Enum):
     DECODE = "decode"
     SWAPPED = "swapped"                # preempted, KV parked on host
     FINISHED = "finished"
+    CANCELLED = "cancelled"            # terminal: caller dropped the
+                                       # request (never a swap_lost)
 
 
 @dataclass
@@ -38,6 +40,16 @@ class Request:
     priority: int = 0                  # higher = scheduled first
     arrival_s: float = 0.0             # bench-relative arrival time
     sampling: SamplingParams = GREEDY  # decode policy (greedy default)
+    tenant: str = "default"            # slo-policy accounting group
+    slo_class: str = ""                # latency | throughput ("" = take
+                                       # the tenant spec's default;
+                                       # resolved at submit)
+    score: bool = False                # teacher-forced logprob scoring:
+                                       # chunked prefill only, no decode
+
+    # scoring output: one log p(prompt[i+1] | prompt[:i+1]) per scored
+    # position, filled during prefill when ``score`` is set
+    logprobs: list[float] = field(default_factory=list)
 
     # runtime (owned by the scheduler/engine)
     state: State = State.QUEUED
@@ -46,6 +58,12 @@ class Request:
     blocks: list[int] = field(default_factory=list)   # block-family layers
     slot: int | None = None            # recurrent-slot-family layers
     preemptions: int = 0
+    streamed: int = 0                  # commit-callback delivery watermark
+                                       # into ``out``; survives recompute
+                                       # preemption (the regenerated
+                                       # tokens are identical by seed/
+                                       # position determinism, so they
+                                       # are not re-delivered)
     # prefix-cache bookkeeping (owned by BlockKVCache)
     skipped_prefill: int = 0           # prompt tokens adopted from the index
     n_registered: int = 0              # full prompt blocks published
@@ -106,6 +124,7 @@ class Request:
         self.state = State.QUEUED
         self.pos = 0
         self.out.clear()
+        self.logprobs.clear()
         self.blocks = []
         self.slot = None
         self.host_kv = None
@@ -131,3 +150,10 @@ class Request:
     def full_sequence(self) -> np.ndarray:
         return np.concatenate(
             [self.prompt, np.asarray(self.out, np.int32)])
+
+    def score_ppl(self) -> float:
+        """Teacher-forced perplexity over the scored prompt positions
+        (scoring requests only; NaN before any chunk lands)."""
+        if not self.logprobs:
+            return float("nan")
+        return float(np.exp(-np.mean(self.logprobs)))

@@ -15,11 +15,14 @@ Each engine step the scheduler emits a StepPlan:
               long prompts, the standard chunked-prefill contract);
   * decode  — every running request past its prompt decodes one token.
 
-Policies: "fcfs" (arrival order) or "priority" (higher first, FCFS
-within a class).  When the block pool runs dry the lowest-priority /
-youngest running request is preempted; ``preempt_policy`` picks how:
-"swap" parks its KV on the host and resumes it later, "recompute"
-drops progress and re-runs from scratch (the fallback policy).
+Ordering, victim selection, and policy-specific admission gates live in
+``serving/policy.py`` (``SchedulingPolicy``): "fcfs" (arrival order),
+"priority" (higher first, FCFS within a class), or "slo" (multi-tenant
+latency/throughput classes with per-tenant token budgets).  When the
+block pool runs dry the policy's victim is preempted; ``preempt_policy``
+picks how: "swap" parks its KV on the host and resumes it later,
+"recompute" drops progress and re-runs from scratch (the fallback
+policy).
 
 Every action appends a trace event — tests assert continuous batching
 (mid-stream admission, concurrent decode) on this trace.
@@ -29,6 +32,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 from repro.serving import roles as R
+from repro.serving.policy import make_policy
 from repro.serving.request import Request, State
 from repro.serving.tracing import Tracer
 
@@ -39,11 +43,14 @@ class SchedulerConfig:
     max_tokens_in_flight: int = 1 << 30   # KV-footprint admission budget
     max_batched_tokens: int = 256     # per-step compute budget
     prefill_chunk: int = 16
-    policy: str = "fcfs"              # fcfs | priority
+    policy: str = "fcfs"              # fcfs | priority | slo
     preempt_policy: str = "swap"      # swap | recompute
     decode_cost: int = 1              # compute tokens one decode row may
                                       # burn per step (spec_k+1 when the
                                       # engine verifies drafts)
+    tenants: str = ""                 # slo-policy tenant spec in the
+                                      # canonical "name=class:budget,..."
+                                      # form (policy.tenants_arg)
 
 
 @dataclass
@@ -74,6 +81,7 @@ class Scheduler:
         self.cfg = cfg
         self.cache = cache
         self.role = role
+        self.policy = make_policy(cfg.policy, tenants=cfg.tenants)
         self.tracer = tracer if tracer is not None else Tracer()
         self.queue: list[Request] = []
         self.running: list[Request] = []
@@ -102,9 +110,14 @@ class Scheduler:
         req.submit_step = step
         req._order = self._order  # tie-break for policy sorts
         self._order += 1
+        if not req.slo_class:
+            # defaulted from the tenant spec so traces, stats, and the
+            # slo victim sort all see the resolved class
+            req.slo_class = self.policy.slo_class(req)
         self.queue.append(req)
         self._ev(step, "submit", req.rid, prompt_len=req.prompt_len,
-                 max_new=req.max_new, priority=req.priority)
+                 max_new=req.max_new, priority=req.priority,
+                 tenant=req.tenant, slo_class=req.slo_class)
 
     def adopt(self, req: Request, step: int, lost: bool = False):
         """Take over a request migrated from a peer shard.
@@ -128,14 +141,16 @@ class Scheduler:
                      preemptions=req.preemptions, reason="shard_lost")
 
     def _queue_order(self) -> list[Request]:
-        if self.cfg.policy == "priority":
-            return sorted(self.queue, key=lambda r: (-r.priority, r._order))
-        return sorted(self.queue, key=lambda r: r._order)
+        return self.policy.queue_order(self.queue)
 
     # ----------------------------------------------------------- admission
 
     def tokens_in_flight(self) -> int:
         return sum(r.total_tokens for r in self.running)
+
+    def tenant_tokens_in_flight(self, tenant: str) -> int:
+        return sum(r.total_tokens for r in self.running
+                   if r.tenant == tenant)
 
     def _admit(self, step: int, plan: StepPlan):
         for req in self._queue_order():
@@ -146,6 +161,13 @@ class Scheduler:
                 plan.transfer_waits += 1
                 self._ev(step, "defer", req.rid, reason="transfer_pending",
                          until_step=req.transfer_until_step)
+                continue
+            reason = self.policy.admission_defer(self, req)
+            if reason is not None:
+                # policy gate (e.g. a tenant over its token budget):
+                # per-request, like transfer_pending — tenants behind
+                # the gated one keep admitting
+                self._ev(step, "defer", req.rid, reason=reason)
                 continue
             if len(self.running) >= self.cfg.max_batch:
                 self._ev(step, "defer", req.rid, reason="no_slot")
@@ -192,14 +214,12 @@ class Scheduler:
     # ---------------------------------------------------------- preemption
 
     def _preempt_one(self, step: int, protect: Request) -> bool:
-        """Free blocks by preempting the lowest-priority / youngest
-        running request — possibly ``protect`` itself.  Preempting the
-        youngest (requeued with its ORIGINAL seniority) guarantees the
-        oldest request always keeps its blocks, so two growing requests
-        can never evict each other forever."""
-        victims = sorted(self.running,
-                         key=lambda r: (r.priority, -r._order))
-        victim = victims[0]
+        """Free blocks by preempting the policy's victim — possibly
+        ``protect`` itself.  All policies prefer the youngest within an
+        equivalence class (requeued with its ORIGINAL seniority), which
+        guarantees the oldest request always keeps its blocks, so two
+        growing requests can never evict each other forever."""
+        victim = self.policy.victim(self.running)
         self.running.remove(victim)
         self.preempts += 1
         # a request with no computed KV has nothing worth swapping
@@ -244,11 +264,8 @@ class Scheduler:
         plan.decode = ([r for r in self.running if r.state == State.DECODE]
                        if self.role.runs_decode else [])
 
-        prefilling = [r for r in self.running if r.state == State.PREFILL]
-        if self.cfg.policy == "priority":
-            prefilling.sort(key=lambda r: (-r.priority, r._order))
-        else:
-            prefilling.sort(key=lambda r: r._order)
+        prefilling = self.policy.prefill_order(
+            [r for r in self.running if r.state == State.PREFILL])
         if prefilling:
             # each decode row may burn decode_cost compute tokens this
             # step (speculative verify feeds spec_k+1 per row, not 1)
@@ -286,6 +303,33 @@ class Scheduler:
         if not self.role.runs_decode:
             out.update({r.rid: (r.state.value, "awaiting_handoff")
                         for r in self.running if r.state == State.DECODE})
+        return out
+
+    def tenant_report(self) -> dict[str, dict]:
+        """Per-tenant live accounting: queued/running counts, in-flight
+        token footprint vs budget, slo class mix, and the last stall
+        reason any of the tenant's requests hit (from the same trace
+        scan as ``stall_reasons`` — ``tenant_budget`` is how an
+        over-budget tenant shows up)."""
+        stalls = {r: reason for r, (_, reason) in self.stall_reasons().items()}
+        out: dict[str, dict] = {}
+        for r in self.queue + self.running:
+            t = out.setdefault(r.tenant, {
+                "queued": 0, "running": 0, "tokens_in_flight": 0,
+                "token_budget": 0, "classes": {}, "stall": None})
+            if r in self.running:
+                t["running"] += 1
+                t["tokens_in_flight"] += r.total_tokens
+            else:
+                t["queued"] += 1
+                if r.rid in stalls:
+                    t["stall"] = stalls[r.rid]
+            klass = r.slo_class or self.policy.slo_class(r)
+            t["classes"][klass] = t["classes"].get(klass, 0) + 1
+        spec = getattr(self.policy, "spec", None)
+        if spec is not None:
+            for name, t in out.items():
+                t["token_budget"] = spec(name).token_budget
         return out
 
     # ------------------------------------------------------------- lifecycle

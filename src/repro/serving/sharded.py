@@ -125,6 +125,8 @@ class ShardedEngine:
         self.handoffs = 0
         self.handoff_bytes = 0
         self._next_handoff_id = 0
+        self.recommended_roles = ""  # last advisory P:D auto-tune
+                                     # (refreshed by rebalance())
 
     # ----------------------------------------------------------- context
 
@@ -141,11 +143,21 @@ class ShardedEngine:
 
     # --------------------------------------------------------- placement
 
+    _TERMINAL = (State.FINISHED, State.CANCELLED)
+
     def shard_load(self, i: int) -> int:
         """Committed-token footprint: KV budget of every unfinished
         request the shard owns (queued + running + swapped)."""
         return sum(r.total_tokens for r in self.engines[i].requests.values()
-                   if r.state != State.FINISHED)
+                   if r.state not in self._TERMINAL)
+
+    def tenant_load(self, i: int, tenant: str) -> int:
+        """Same footprint restricted to one tenant — the tenant-aware
+        placement tie-break (an slo tenant's budget is checked per
+        shard scheduler, so spreading a tenant across shards raises the
+        concurrency its budget actually buys)."""
+        return sum(r.total_tokens for r in self.engines[i].requests.values()
+                   if r.state not in self._TERMINAL and r.tenant == tenant)
 
     def prefill_depth(self, i: int) -> int:
         """Prefill queue depth: prompt tokens still to compute across
@@ -154,23 +166,29 @@ class ShardedEngine:
         how long a NEW prompt waits behind its prefill queue)."""
         return sum(max(r.prompt_len - r.pos, 0)
                    for r in self.engines[i].requests.values()
-                   if r.state not in (State.FINISHED, State.DECODE))
+                   if r.state not in (State.FINISHED, State.CANCELLED,
+                                      State.DECODE))
 
     def _alive_roles(self, pred) -> list[int]:
         return [i for i in self.alive if pred(R.get_role(self.roles[i]))]
 
-    def _place(self, exclude: int | None = None) -> int:
+    def _place(self, exclude: int | None = None,
+               tenant: str | None = None) -> int:
         """Least-loaded alive DECODE-CAPABLE shard: the placement for
         anything past its prompt (handoffs, migration, decode rescue).
         With homogeneous mixed roles this is every shard — exactly the
-        pre-role behavior."""
+        pre-role behavior.  ``tenant`` breaks load ties toward the
+        shard with the least of THAT tenant's footprint (a no-op for
+        single-tenant traffic: the tenant load IS the shard load)."""
         cands = [i for i in self._alive_roles(lambda r: r.runs_decode)
                  if i != exclude]
         if not cands:
             raise RuntimeError("no alive decode-capable shard to place on")
-        return min(cands, key=lambda i: (self.shard_load(i), i))
+        return min(cands, key=lambda i: (
+            self.shard_load(i),
+            self.tenant_load(i, tenant) if tenant else 0, i))
 
-    def _place_fresh(self) -> int:
+    def _place_fresh(self, tenant: str | None = None) -> int:
         """Placement for a request that still needs its prompt
         computed: the shallowest prefill-role shard when one is alive
         (prefill queue depth, not committed tokens), else the ordinary
@@ -179,28 +197,50 @@ class ShardedEngine:
         topology instead of wedging."""
         prefill = self._alive_roles(lambda r: r.hands_off)
         if prefill:
-            return min(prefill, key=lambda i: (self.prefill_depth(i), i))
-        return self._place()
+            return min(prefill, key=lambda i: (
+                self.prefill_depth(i),
+                self.tenant_load(i, tenant) if tenant else 0, i))
+        return self._place(tenant=tenant)
 
     # --------------------------------------------------------------- API
 
     def submit(self, prompt, max_new: int, *, shard: int | None = None,
                priority: int = 0, arrival_s: float = 0.0,
-               sampling: SamplingParams | None = None) -> int:
+               sampling: SamplingParams | None = None,
+               tenant: str = "default", slo_class: str = "",
+               score: bool = False) -> int:
         """Place a request on the least-loaded alive shard (or a pinned
         one) under a GLOBAL rid space."""
         if shard is None:
-            shard = self._place_fresh()
+            shard = self._place_fresh(tenant=tenant)
         elif shard not in self.alive:
             raise ValueError(f"shard {shard} is not alive")
         rid = self._next_rid
         self._next_rid += 1
         with self._on_shard(shard) as eng:
             eng.submit(prompt, max_new, priority=priority,
-                       arrival_s=arrival_s, sampling=sampling, rid=rid)
+                       arrival_s=arrival_s, sampling=sampling, rid=rid,
+                       tenant=tenant, slo_class=slo_class, score=score)
         self.requests[rid] = eng.requests[rid]
         self.shard_of[rid] = shard
         return rid
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel wherever the request currently lives — including one
+        parked in a prefill shard's ``handoff_ready`` (the engine drops
+        it from the handoff queue, so it is never exported)."""
+        i = self.shard_of.get(rid)
+        if i is None:
+            return False
+        with self._on_shard(i) as eng:
+            return eng.cancel(rid)
+
+    def set_commit_callback(self, cb):
+        """One streaming callback across every shard: rids are global,
+        so commits interleave into a single stream regardless of where
+        a request runs (or migrates to)."""
+        for eng in self.engines:
+            eng.set_commit_callback(cb)
 
     def step(self) -> bool:
         """One iteration of every alive, non-idle shard (simulated
@@ -209,6 +249,9 @@ class ShardedEngine:
         progressed = False
         for i in self.alive:
             eng = self.engines[i]
+            # terminal rids may be parked on an otherwise-idle shard:
+            # drain before the idle check so they never linger
+            progressed = self._drain_handoffs(i) or progressed
             if eng.scheduler.idle:
                 continue
             t0 = time.perf_counter()
@@ -218,10 +261,25 @@ class ShardedEngine:
                               time.perf_counter() - t0)
             # drain completed prefills to decode shards immediately:
             # the handoff is part of the same simulated step
-            while eng.handoff_ready:
-                self._handoff(i, eng.handoff_ready.pop(0))
-                progressed = True
+            progressed = self._drain_handoffs(i) or progressed
         return progressed
+
+    def _drain_handoffs(self, i: int) -> bool:
+        """Export shard ``i``'s parked completed prefills to decode
+        peers.  Anything that reached a terminal state while parked
+        (cancelled — or finished, should a future path allow it) is
+        dropped instead of exported: handing off a terminal request
+        would re-adopt dead work on the decode peer."""
+        eng = self.engines[i]
+        moved = False
+        while eng.handoff_ready:
+            rid = eng.handoff_ready.pop(0)
+            req = eng.requests.get(rid)
+            if req is None or req.state in self._TERMINAL:
+                continue
+            self._handoff(i, rid)
+            moved = True
+        return moved
 
     @property
     def idle(self) -> bool:
@@ -284,7 +342,7 @@ class ShardedEngine:
         (``transfer_pending`` admission gate), and both sides emit a
         ``handoff_out``/``handoff_in`` span pair sharing a
         ``handoff_id`` so the trace viewer can draw the flow arrow."""
-        dst = self._place()
+        dst = self._place(tenant=self.engines[src].requests[rid].tenant)
         dst_eng = self.engines[dst]
         hid = self._next_handoff_id
         self._next_handoff_id += 1
@@ -307,6 +365,30 @@ class ShardedEngine:
         self.handoff_bytes += n_bytes
         return dst
 
+    def recommend_roles(self) -> str:
+        """Recommend a P:D split from observed pressure: prefill-queue
+        tokens per prefill shard vs committed-token load per decode
+        shard.  When one side's per-shard pressure exceeds 2x the
+        other's and the other side can give up a shard, the
+        recommendation shifts one shard across.  Advisory only — the
+        caller re-launches with the new ``roles`` spec; nothing is
+        re-roled live (the jit closures are role-specialized at
+        construction).  Returns "" for topologies with no dedicated
+        prefill shard (nothing to trade)."""
+        pre = self._alive_roles(lambda r: r.hands_off)
+        dec = self._alive_roles(lambda r: r.runs_decode)
+        if not pre or not dec:
+            return ""
+        p, d = len(pre), len(dec)
+        prefill_pressure = sum(self.prefill_depth(i) for i in pre) / p
+        decode_pressure = sum(self.shard_load(i) for i in dec) / d
+        rp, rd = p, d
+        if prefill_pressure > 2 * decode_pressure and d > 1:
+            rp, rd = p + 1, d - 1
+        elif decode_pressure > 2 * prefill_pressure and p > 1:
+            rp, rd = p - 1, d + 1
+        return f"{rp}:{rd}"
+
     def rebalance(self, max_moves: int = 1) -> int:
         """Move up to ``max_moves`` QUEUED requests from the most- to
         the least-loaded shard when the gap exceeds one request's
@@ -315,7 +397,21 @@ class ShardedEngine:
         from serializing behind it.  Role-aware: moves stay within a
         role class (prefill shards trade fresh prompts, decode-capable
         shards trade decode work) so rebalancing never routes a prompt
-        where the placement policy would not."""
+        where the placement policy would not.
+
+        Also refreshes the advisory P:D auto-tune: when
+        ``recommend_roles()`` disagrees with the current topology the
+        recommendation is logged once per change and surfaced in
+        ``stats()["recommended_roles"]`` — no live re-roling."""
+        rec = self.recommend_roles()
+        if rec and rec != self.recommended_roles:
+            cur = "%d:%d" % (len(self._alive_roles(lambda r: r.hands_off)),
+                             len(self._alive_roles(lambda r: r.runs_decode)))
+            if rec != cur:
+                print(f"[sharded] role auto-tune: observed pressure "
+                      f"suggests roles {rec} (currently {cur}); "
+                      f"re-launch with --roles {rec} to apply")
+        self.recommended_roles = rec
         moved = 0
         groups = [g for g in (self._alive_roles(lambda r: r.hands_off),
                               self._alive_roles(lambda r: r.runs_decode))
@@ -353,7 +449,7 @@ class ShardedEngine:
                 "prefill shards can never finish a request")
         eng = self.engines[i]
         for rid, req in list(eng.requests.items()):
-            if req.state == State.FINISHED:
+            if req.state in self._TERMINAL:
                 continue             # output already committed host-side
             # SWAPPED state lives in host buffers and re-admits on the
             # survivor (missing hash chains degrade to swap_lost
@@ -468,6 +564,7 @@ class ShardedEngine:
             "p99_latency_s": nearest_rank(lat, 99),
             "migrations": self.migrations,
             "requeued_lost": self.requeued_lost,
+            "recommended_roles": self.recommended_roles,
             "handoff": {
                 **cm.handoff_report(handoffs=self.handoffs,
                                     handoff_bytes=self.handoff_bytes),

@@ -50,7 +50,12 @@ from collections import deque
 # carries ``role``, and prefill->decode handoffs emit paired
 # ``handoff_out``/``handoff_in`` span records with ``handoff_id``,
 # ``bytes``, ``peer``, and the modeled ``transfer_s``.
-TRACE_SCHEMA_VERSION = 3
+# v4: multi-tenant SLO scheduling (serving/policy.py) — ``submit``
+# request records carry ``tenant``/``slo_class``, cancellation emits a
+# terminal ``cancelled`` request event (never counted as swap_lost),
+# the ``tenant_budget`` defer reason joins the stall vocabulary, and
+# scoring prefills mark their step-record prefill info ``score=True``.
+TRACE_SCHEMA_VERSION = 4
 
 # record types a valid trace may contain (schema checks + exporter)
 RECORD_TYPES = ("meta", "step", "request", "span")

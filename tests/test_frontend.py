@@ -1,0 +1,305 @@
+"""Streaming front-end, cancellation, and scoring-workload tests.
+
+Pins the ISSUE contracts: streaming is byte-identical to the batch
+``run()`` output for uncancelled requests (delivery watermark survives
+recompute preemption; speculative commits arrive as bursts),
+cancellation releases every block/slot the request held (allocator
+``check()`` after a cancel storm, zero ``swap_losts``), the asyncio
+``Frontend`` interleaves two tenants with a mid-decode cancel and a
+scoring request on one event loop, and teacher-forced scoring matches
+the model's ``logits_fn`` oracle."""
+import asyncio
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import transformer as M
+from repro.serving import (Engine, EngineConfig, Frontend, ShardedEngine,
+                           State)
+
+VOCAB_SEED = 11
+
+
+def _prompts(cfg, n, plen, seed=VOCAB_SEED):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab, (n, plen), dtype=np.int32).astype(
+        np.int32)
+
+
+def _engine(bnn_cfg, bnn_params, **kw):
+    ecfg = EngineConfig(**{**dict(block_size=4, num_blocks=40, max_batch=3,
+                                  prefill_chunk=4, max_model_len=24,
+                                  prefix_cache=False), **kw})
+    return Engine(bnn_params, bnn_cfg, ecfg)
+
+
+def _collect_streams(eng):
+    """Install a commit callback recording every burst per rid."""
+    got: dict[int, list[list[int]]] = {}
+    done: dict[int, bool] = {}
+
+    def cb(rid, tokens, is_done):
+        got.setdefault(rid, []).append(tokens)
+        assert not done.get(rid), f"commit after done for rid {rid}"
+        if is_done:
+            done[rid] = True
+    eng.set_commit_callback(cb)
+    return got, done
+
+
+# ------------------------------------------------------------- streaming
+
+def test_stream_byte_identical_to_run_with_recompute(bnn_cfg, bnn_params):
+    """Tight pool + recompute preemption: preempted requests regenerate
+    an identical prefix which must NOT be re-delivered — the
+    concatenated bursts still equal the batch output exactly."""
+    eng = _engine(bnn_cfg, bnn_params, num_blocks=11, max_batch=3,
+                  preempt_policy="recompute")
+    got, done = _collect_streams(eng)
+    prompts = _prompts(bnn_cfg, 3, 8)
+    rids = [eng.submit(prompts[b], 8) for b in range(3)]
+    out = eng.run()
+    assert eng.scheduler.preempts > 0      # the pool actually thrashed
+    for b, rid in enumerate(rids):
+        assert done[rid]
+        streamed = [t for burst in got[rid] for t in burst]
+        np.testing.assert_array_equal(streamed, out[rid][8:])
+
+
+def test_stream_spec_decoding_bursts(bnn_cfg, bnn_params, monkeypatch):
+    """Speculative decoding commits whole accepted bursts; the
+    concatenation still equals the batch output."""
+    prompts = _prompts(bnn_cfg, 2, 8)
+    plain = _engine(bnn_cfg, bnn_params, max_model_len=40)
+    prids = [plain.submit(p, 16) for p in prompts]
+    pout = plain.run()
+    gold = [pout[r][8:] for r in prids]
+
+    import repro.serving.engine as E
+
+    # oracle drafter (the test_sampling_spec idiom): drafts are always
+    # right, so every verify commits a whole multi-token burst
+    def oracle(seq, k, ngram):
+        for p, g in zip(prompts, gold):
+            if np.array_equal(seq[:8], p):
+                n = len(seq) - 8
+                return np.asarray(g[n:n + k], np.int32)
+        return np.asarray([], np.int32)
+
+    monkeypatch.setattr(E, "prompt_lookup_draft", oracle)
+    eng = _engine(bnn_cfg, bnn_params, spec_k=3, max_model_len=40)
+    got, done = _collect_streams(eng)
+    rids = [eng.submit(p, 16) for p in prompts]
+    out = eng.run()
+    assert eng.stats()["speculative"]["accepted_tokens"] > 0
+    saw_burst = False
+    for rid in rids:
+        assert done[rid]
+        bursts = got[rid]
+        saw_burst |= any(len(b) > 1 for b in bursts)
+        np.testing.assert_array_equal(
+            [t for b in bursts for t in b], out[rid][8:])
+    assert saw_burst     # at least one multi-token speculative commit
+
+
+def test_stream_identical_across_sharded_roles(bnn_cfg, bnn_params):
+    """Disaggregated prefill/decode topology: commits fire on whichever
+    shard holds the request; per-rid concatenation matches ``run()``."""
+    ecfg = EngineConfig(block_size=4, num_blocks=40, max_batch=2,
+                        prefill_chunk=4, max_model_len=24,
+                        prefix_cache=False)
+    eng = ShardedEngine(bnn_params, bnn_cfg, ecfg, 2,
+                        roles="prefill,decode")
+    got, done = _collect_streams(eng)
+    prompts = _prompts(bnn_cfg, 3, 8)
+    rids = [eng.submit(prompts[b], 8) for b in range(3)]
+    out = eng.run()
+    for b, rid in enumerate(rids):
+        assert done[rid]
+        np.testing.assert_array_equal(
+            [t for burst in got[rid] for t in burst], out[rid][8:])
+
+
+# ----------------------------------------------------------- cancellation
+
+def test_cancel_storm_releases_everything(bnn_cfg, bnn_params):
+    """Cancel queued, running, and swapped requests mid-flight: every
+    block returns to the pool (allocator invariants hold), no request
+    is ever counted as swap_lost, and all streams terminate."""
+    eng = _engine(bnn_cfg, bnn_params, num_blocks=13, max_batch=2,
+                  preempt_policy="swap")
+    got, done = _collect_streams(eng)
+    prompts = _prompts(bnn_cfg, 6, 8)
+    rids = [eng.submit(prompts[b], 8) for b in range(6)]
+    for _ in range(9):       # some running, some queued, likely swapped
+        eng.step()
+    states = {eng.requests[r].state for r in rids}
+    assert State.QUEUED in states or State.SWAPPED in states
+    for rid in rids:
+        if eng.requests[rid].state is not State.FINISHED:
+            assert eng.cancel(rid)
+            assert not eng.cancel(rid)          # already terminal
+    assert eng.scheduler.idle
+    alloc = eng.cache.attn.allocator
+    assert alloc.num_used == 0 and alloc.num_free == alloc.capacity
+    alloc.check()
+    assert eng.scheduler.swap_losts == 0
+    st = eng.stats()
+    assert st["cancelled"] == sum(
+        1 for r in rids if eng.requests[r].state is State.CANCELLED)
+    for rid in rids:
+        assert done[rid]                       # every stream terminated
+        ev = [e for e in eng.scheduler.trace
+              if e["rid"] == rid and e["event"] == "cancelled"]
+        if eng.requests[rid].state is State.CANCELLED:
+            assert len(ev) == 1
+            assert ev[0]["generated"] == len(eng.requests[rid].out)
+    assert not any(e["event"] == "swap_lost" for e in eng.scheduler.trace)
+    assert eng.cancel(999) is False            # unknown rid
+
+
+def test_cancel_queued_before_any_step(bnn_cfg, bnn_params):
+    eng = _engine(bnn_cfg, bnn_params, max_batch=1)
+    got, done = _collect_streams(eng)
+    prompts = _prompts(bnn_cfg, 2, 8)
+    keep, drop = (eng.submit(p, 4) for p in prompts)
+    assert eng.cancel(drop)
+    assert eng.requests[drop].state is State.CANCELLED
+    out = eng.run()
+    assert drop not in out and keep in out
+    assert done[drop] and got[drop] == [[]]    # terminal commit, no tokens
+
+
+def test_cancel_mid_decode_from_commit_callback(bnn_cfg, bnn_params):
+    """Cancelling from inside the commit callback (what the front-end's
+    consumers effectively do) must not corrupt the decode loop."""
+    eng = _engine(bnn_cfg, bnn_params)
+    target = {}
+
+    def cb(rid, tokens, is_done):
+        if rid == target.get("rid") and len(eng.requests[rid].out) >= 3:
+            eng.cancel(rid)
+    eng.set_commit_callback(cb)
+    prompts = _prompts(bnn_cfg, 3, 8)
+    rids = [eng.submit(p, 8) for p in prompts]
+    target["rid"] = rids[1]
+    out = eng.run()
+    victim = eng.requests[rids[1]]
+    assert victim.state is State.CANCELLED and 3 <= len(victim.out) < 8
+    assert rids[1] not in out
+    for rid in (rids[0], rids[2]):             # others unaffected
+        assert len(out[rid]) == 16
+    alloc = eng.cache.attn.allocator
+    assert alloc.num_used == 0
+    alloc.check()
+
+
+# -------------------------------------------------------------- scoring
+
+def test_score_matches_logits_oracle(bnn_cfg, bnn_params):
+    """Chunked teacher-forced scoring over the paged cache must match
+    log-softmax of the model's one-shot ``logits_fn`` at every scored
+    position (prompt[1:] given the prefix)."""
+    eng = _engine(bnn_cfg, bnn_params, prefill_chunk=4, max_model_len=16)
+    prompt = _prompts(bnn_cfg, 1, 10)[0]
+    rid = eng.submit(prompt, 0, score=True)
+    eng.run()
+    req = eng.requests[rid]
+    assert req.state is State.FINISHED and len(req.out) == 0
+    assert len(req.logprobs) == 9              # positions 1..9
+    logits = np.asarray(M.logits_fn(bnn_params, bnn_cfg,
+                                    {"tokens": prompt[None, :]}),
+                        np.float64)[0]
+    ref = logits - np.log(np.sum(np.exp(
+        logits - logits.max(-1, keepdims=True)), -1,
+        keepdims=True)) - logits.max(-1, keepdims=True)
+    want = [ref[j, prompt[j + 1]] for j in range(9)]
+    np.testing.assert_allclose(req.logprobs, want, rtol=1e-4, atol=1e-4)
+    assert np.isfinite(req.score_ppl())
+    st = eng.stats()
+    assert st["scoring"]["requests"] == 1
+    assert st["scoring"]["scored_tokens"] == 9
+    assert st["scoring"]["score_passes"] >= 3  # chunked, not one-shot
+    assert st["photonic"]["modeled_scoring_tokens_per_s"] > 0
+
+
+def test_score_request_validation(bnn_cfg, bnn_params):
+    eng = _engine(bnn_cfg, bnn_params)
+    with pytest.raises(ValueError):
+        eng.submit(np.zeros(1, np.int32), 0, score=True)
+
+
+# ------------------------------------------------------------- front-end
+
+def test_frontend_two_tenants_cancel_and_score(bnn_cfg, bnn_params):
+    """The full async surface on one event loop: mid-flight submits
+    from two tenants under the slo policy, a mid-decode cancel, and a
+    scoring request backfilling as throughput-class work."""
+    eng = _engine(bnn_cfg, bnn_params, max_batch=2, policy="slo",
+                  tenants="web=latency:0,bulk=throughput:0")
+    prompts = _prompts(bnn_cfg, 4, 8)
+    # reference: same requests through a fresh engine's batch path
+    ref_eng = _engine(bnn_cfg, bnn_params, max_batch=2)
+    r0 = ref_eng.submit(prompts[0], 8)
+    r1 = ref_eng.submit(prompts[1], 8)
+    ref = ref_eng.run()
+
+    async def go():
+        async with Frontend(eng) as fe:
+            web = fe.submit(prompts[0], 8, tenant="web")
+            bulk = fe.submit(prompts[1], 8, tenant="bulk")
+            victim = fe.submit(prompts[2], 8, tenant="bulk")
+
+            async def consume(rid):
+                toks = []
+                async for burst in fe.stream(rid):
+                    toks.extend(burst)
+                return toks
+
+            async def consume_and_cancel(rid):
+                toks = []
+                async for burst in fe.stream(rid):
+                    toks.extend(burst)
+                    if len(toks) >= 2:
+                        fe.cancel(rid)
+                return toks
+
+            web_toks, bulk_toks, victim_toks, score = \
+                await asyncio.gather(
+                    consume(web), consume(bulk),
+                    consume_and_cancel(victim),
+                    fe.score(prompts[3], tenant="bulk"))
+            return web, bulk, victim, web_toks, bulk_toks, victim_toks, \
+                score
+
+    web, bulk, victim, web_toks, bulk_toks, victim_toks, score = \
+        asyncio.run(go())
+    assert eng.requests[web].slo_class == "latency"
+    assert eng.requests[bulk].slo_class == "throughput"
+    assert eng.requests[victim].state is State.CANCELLED
+    assert 2 <= len(victim_toks) < 8
+    # uncancelled streams are byte-identical to the batch reference
+    np.testing.assert_array_equal(web_toks, ref[r0][8:])
+    np.testing.assert_array_equal(bulk_toks, ref[r1][8:])
+    assert score["scored_tokens"] == 7 and np.isfinite(score["ppl"])
+    # pool is clean after the mixed workload
+    alloc = eng.cache.attn.allocator
+    assert alloc.num_used == 0
+    alloc.check()
+    rep = eng.stats()["tenants"]
+    assert rep == {}                # all drained -> empty live report
+
+
+def test_frontend_generate_matches_engine_run(bnn_cfg, bnn_params):
+    eng = _engine(bnn_cfg, bnn_params)
+    ref_eng = _engine(bnn_cfg, bnn_params)
+    prompt = _prompts(bnn_cfg, 1, 8)[0]
+    rid = ref_eng.submit(prompt, 8)
+    want = ref_eng.run()[rid]
+
+    async def go():
+        async with Frontend(eng) as fe:
+            return await fe.generate(prompt, 8)
+
+    np.testing.assert_array_equal(asyncio.run(go()), want)

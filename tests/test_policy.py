@@ -1,0 +1,224 @@
+"""Scheduling-policy layer tests (serving/policy.py).
+
+The extraction contract: ``fcfs`` and ``priority`` must reproduce the
+pre-refactor scheduler's sorts EXACTLY (differential tests against
+inline reimplementations of the old keys, plus an engine-level
+fcfs-vs-priority token identity when every priority ties).  The ``slo``
+policy's additions — class-first ordering, per-tenant budgets that
+never head-of-line block, throughput-first decode-protected victim
+selection, and the per-tenant report — are pinned at scheduler level.
+"""
+import numpy as np
+import pytest
+
+from repro.serving import (BlockKVCache, Engine, EngineConfig, Request,
+                           Scheduler, SchedulerConfig, State)
+from repro.serving.policy import (LATENCY, THROUGHPUT, FCFSPolicy,
+                                  PriorityPolicy, SLOPolicy,
+                                  SchedulingPolicy, TenantSpec,
+                                  make_policy, parse_tenants, tenants_arg)
+
+
+def _req(rid, order, *, priority=0, state=State.QUEUED, tenant="default",
+         slo_class="", prompt_len=8, max_new=8):
+    r = Request(rid, np.zeros(prompt_len, np.int32), max_new,
+                priority=priority, tenant=tenant, slo_class=slo_class)
+    r._order = order
+    r.state = state
+    return r
+
+
+# ------------------------------------------------- spec parsing / protocol
+
+def test_parse_tenants_forms_agree():
+    canonical = "a=latency:2048,b=throughput:0"
+    from_str = parse_tenants(canonical)
+    from_triples = parse_tenants([("a", "latency", 2048),
+                                  ("b", "throughput", 0)])
+    assert from_str == from_triples
+    assert from_str["a"] == TenantSpec("a", LATENCY, 2048)
+    # budget and class are optional in the string form
+    assert parse_tenants("x")["x"] == TenantSpec("x", LATENCY, 0)
+    assert parse_tenants("x=throughput")["x"].slo_class == THROUGHPUT
+    # canonicalization is a fixed point (what frozen configs store)
+    assert tenants_arg(canonical) == canonical
+    assert tenants_arg(from_triples) == canonical
+    assert tenants_arg("") == ""
+
+
+def test_tenant_spec_validation():
+    with pytest.raises(ValueError):
+        TenantSpec("t", "interactive")      # unknown class
+    with pytest.raises(ValueError):
+        TenantSpec("t", LATENCY, -1)        # negative budget
+    with pytest.raises(ValueError):
+        make_policy("edf")                  # unknown policy
+
+
+def test_policies_satisfy_protocol():
+    for name in ("fcfs", "priority", "slo"):
+        assert isinstance(make_policy(name), SchedulingPolicy)
+
+
+# ------------------------------------- differential: pre-refactor sorts
+
+def test_fcfs_matches_pre_refactor_sorts():
+    """FCFSPolicy must equal the old scheduler's literal sort keys:
+    queue/prefill by ``_order``, victim ``(priority, -_order)[0]``."""
+    rng = np.random.default_rng(0)
+    pol = FCFSPolicy()
+    for trial in range(50):
+        n = int(rng.integers(1, 12))
+        orders = rng.permutation(100)[:n]
+        prios = rng.integers(-3, 4, n)
+        reqs = [_req(i, int(orders[i]), priority=int(prios[i]),
+                     state=State.DECODE) for i in range(n)]
+        assert pol.queue_order(reqs) == sorted(reqs, key=lambda r: r._order)
+        assert pol.prefill_order(reqs) == sorted(reqs,
+                                                 key=lambda r: r._order)
+        assert pol.victim(reqs) is sorted(
+            reqs, key=lambda r: (r.priority, -r._order))[0]
+
+
+def test_priority_matches_pre_refactor_sorts():
+    rng = np.random.default_rng(1)
+    pol = PriorityPolicy()
+    for trial in range(50):
+        n = int(rng.integers(1, 12))
+        orders = rng.permutation(100)[:n]
+        prios = rng.integers(-3, 4, n)
+        reqs = [_req(i, int(orders[i]), priority=int(prios[i]),
+                     state=State.DECODE) for i in range(n)]
+        key = lambda r: (-r.priority, r._order)
+        assert pol.queue_order(reqs) == sorted(reqs, key=key)
+        assert pol.prefill_order(reqs) == sorted(reqs, key=key)
+        # victim selection is shared with fcfs
+        assert pol.victim(reqs) is sorted(
+            reqs, key=lambda r: (r.priority, -r._order))[0]
+
+
+def test_fcfs_priority_agree_when_priorities_tie():
+    """With uniform priorities the priority policy degenerates to fcfs
+    — same orderings, same victims (the refactor's no-op guarantee)."""
+    rng = np.random.default_rng(2)
+    fcfs, prio = FCFSPolicy(), PriorityPolicy()
+    for trial in range(25):
+        n = int(rng.integers(1, 10))
+        reqs = [_req(i, int(o), state=State.DECODE)
+                for i, o in enumerate(rng.permutation(64)[:n])]
+        assert fcfs.queue_order(reqs) == prio.queue_order(reqs)
+        assert fcfs.victim(reqs) is prio.victim(reqs)
+
+
+def test_engine_fcfs_vs_priority_token_identical(bnn_cfg, bnn_params):
+    """Engine-level differential: with every priority equal, the
+    priority policy must reproduce fcfs's scheduler trace and tokens."""
+    outs, traces = [], []
+    for policy in ("fcfs", "priority"):
+        ecfg = EngineConfig(block_size=4, num_blocks=24, max_batch=2,
+                            prefill_chunk=4, max_model_len=16,
+                            prefix_cache=False, policy=policy)
+        eng = Engine(bnn_params, bnn_cfg, ecfg)
+        prompts = np.asarray(
+            np.random.default_rng(3).integers(0, bnn_cfg.vocab, (4, 8)),
+            np.int32)
+        for b in range(4):
+            eng.submit(prompts[b], 8)
+        outs.append(eng.run())
+        traces.append([(e["event"], e["rid"])
+                       for e in eng.scheduler.trace
+                       if e["event"] in ("admit", "defer", "finish")])
+    assert traces[0] == traces[1]
+    assert outs[0].keys() == outs[1].keys()
+    for rid in outs[0]:
+        np.testing.assert_array_equal(outs[0][rid], outs[1][rid])
+
+
+# ----------------------------------------------------------- slo policy
+
+def test_slo_queue_order_latency_class_first():
+    pol = SLOPolicy("web=latency:0,bulk=throughput:0")
+    web = _req(0, 5, tenant="web", slo_class=LATENCY)
+    bulk = _req(1, 1, tenant="bulk", slo_class=THROUGHPUT)
+    web2 = _req(2, 9, tenant="web", slo_class=LATENCY, priority=1)
+    # latency class beats arrival order; priority breaks ties within it
+    assert pol.queue_order([bulk, web, web2]) == [web2, web, bulk]
+    assert pol.prefill_order([bulk, web]) == [web, bulk]
+    # the class defaults from the tenant spec when unset on the request
+    assert pol.slo_class(_req(3, 0, tenant="bulk")) == THROUGHPUT
+    assert pol.slo_class(_req(4, 0, tenant="unknown")) == LATENCY
+
+
+def test_slo_victim_throughput_first_decode_protected():
+    pol = SLOPolicy("web=latency:0,bulk=throughput:0")
+    lat_dec = _req(0, 0, tenant="web", slo_class=LATENCY,
+                   state=State.DECODE)
+    lat_pre = _req(1, 1, tenant="web", slo_class=LATENCY,
+                   state=State.PREFILL)
+    thr_dec = _req(2, 2, tenant="bulk", slo_class=THROUGHPUT,
+                   state=State.DECODE)
+    thr_pre = _req(3, 3, tenant="bulk", slo_class=THROUGHPUT,
+                   state=State.PREFILL)
+    # throughput absorbs preemption before any latency request...
+    assert pol.victim([lat_dec, lat_pre, thr_dec, thr_pre]) is thr_pre
+    assert pol.victim([lat_dec, lat_pre, thr_dec]) is thr_dec
+    # ...and a latency request that reached decode is preempted LAST
+    assert pol.victim([lat_dec, lat_pre]) is lat_pre
+    # within a class+state tier: youngest goes first (old fcfs rule)
+    thr_pre2 = _req(4, 9, tenant="bulk", slo_class=THROUGHPUT,
+                    state=State.PREFILL)
+    assert pol.victim([thr_pre, thr_pre2]) is thr_pre2
+
+
+def _mk_sched(bnn_cfg, **kw):
+    cache = BlockKVCache(bnn_cfg, num_blocks=64, block_size=4,
+                         max_model_len=32)
+    return Scheduler(SchedulerConfig(**kw), cache)
+
+
+def test_slo_tenant_budget_defers_without_blocking(bnn_cfg):
+    """An over-budget tenant defers with reason ``tenant_budget`` but
+    does NOT head-of-line block other tenants (continue semantics)."""
+    sched = _mk_sched(bnn_cfg, max_batch=4, policy="slo",
+                      tenants=tenants_arg("bulk=throughput:20,web=latency:0"))
+    # each bulk request has a 16-token footprint; budget 20 fits one.
+    # bulk arrives FIRST but only one admits; web admits behind the gate
+    sched.submit(_req(0, 0, tenant="bulk"), step=0)
+    sched.submit(_req(1, 0, tenant="bulk"), step=0)
+    sched.submit(_req(2, 0, tenant="web"), step=0)
+    plan = sched.schedule(0)
+    # slo order puts web (latency) first, then the bulk pair
+    assert {r.rid for r in plan.admitted} == {0, 2}
+    defers = [(e["rid"], e["reason"]) for e in sched.trace
+              if e["event"] == "defer"]
+    assert defers == [(1, "tenant_budget")]
+    # the gated request admits once its tenant's footprint frees
+    sched.finish(1, next(r for r in sched.running if r.rid == 0))
+    plan = sched.schedule(2)
+    assert [r.rid for r in plan.admitted] == [1]
+
+
+def test_slo_submit_resolves_class_and_traces_tenant(bnn_cfg):
+    sched = _mk_sched(bnn_cfg, max_batch=2, policy="slo",
+                      tenants=tenants_arg("bulk=throughput:0"))
+    sched.submit(_req(0, 0, tenant="bulk"), step=0)
+    sub = [e for e in sched.trace if e["event"] == "submit"][0]
+    assert sub["tenant"] == "bulk" and sub["slo_class"] == THROUGHPUT
+    # the resolved class is stamped onto the request itself
+    assert sched.queue[0].slo_class == THROUGHPUT
+
+
+def test_tenant_report(bnn_cfg):
+    sched = _mk_sched(bnn_cfg, max_batch=1, policy="slo",
+                      tenants=tenants_arg("bulk=throughput:24,web=latency:0"))
+    sched.submit(_req(0, 0, tenant="bulk"), step=0)
+    sched.submit(_req(1, 0, tenant="web"), step=0)
+    sched.schedule(0)           # web admits (latency first), bulk defers
+    rep = sched.tenant_report()
+    assert rep["web"]["running"] == 1 and rep["web"]["queued"] == 0
+    assert rep["web"]["tokens_in_flight"] == 16
+    assert rep["web"]["token_budget"] == 0
+    assert rep["web"]["classes"] == {LATENCY: 1}
+    assert rep["bulk"]["queued"] == 1 and rep["bulk"]["running"] == 0
+    assert rep["bulk"]["token_budget"] == 24
+    assert rep["bulk"]["stall"] == "no_slot"

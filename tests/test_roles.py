@@ -287,7 +287,7 @@ def test_handoff_spans_and_replay_transfer_term(bnn_cfg, bnn_params,
     for i, records in all_records.items():
         validate_trace(records)
         meta = records[0]
-        assert meta["schema"] == 3
+        assert meta["schema"] == 4
         assert meta["role"] == se.roles[i]
         assert meta["link_gbps"] == 100.0
         assert "t0" in meta
@@ -323,3 +323,60 @@ def test_handoff_spans_and_replay_transfer_term(bnn_cfg, bnn_params,
             assert ho["exposed_transfer_s"] >= 0
             assert rep["simulated_s_with_transfer"] >= rep["simulated_s"]
     assert got_in == se.handoffs
+
+
+# --------------------------- terminal requests parked in handoff_ready
+
+def test_cancel_while_parked_in_handoff_never_exports(bnn_cfg, bnn_params):
+    """Regression: a request cancelled while parked in a prefill
+    shard's ``handoff_ready`` must be dropped, not exported — the old
+    drain loop would hand the dead request to a decode peer (and, on an
+    otherwise-idle prefill shard, never drop it at all)."""
+    # prefix_cache off so the pool-empty assertion below is exact (the
+    # index would otherwise keep released prompt blocks resident)
+    se = _sharded(bnn_cfg, bnn_params, 2, roles="prefill,decode",
+                  prefix_cache=False)
+    rid = se.submit(_prompts(bnn_cfg, [8], seed=51)[0], 8)
+    live = se.submit(_prompts(bnn_cfg, [8], seed=52)[0], 8)
+    # step ONLY the prefill shard so the sharded drain never runs: the
+    # completed prefill parks awaiting export
+    with se._on_shard(0) as p:
+        for _ in range(30):
+            if rid in p.handoff_ready and live in p.handoff_ready:
+                break
+            p.step()
+    assert rid in p.handoff_ready
+    assert se.cancel(rid)                    # engine drops it from the queue
+    assert rid not in p.handoff_ready
+    assert se.requests[rid].state is State.CANCELLED
+    out = se.run()                           # the live request still flows
+    assert rid not in out and live in out
+    assert rid not in se.engines[1].requests     # never reached the peer
+    assert se.handoffs == 1                      # only the live handoff
+    assert se.engines[0].cache.attn.allocator.num_used == 0
+
+
+def test_terminal_parked_request_dropped_by_idle_shard_drain(bnn_cfg,
+                                                             bnn_params):
+    """Second line of defense: if a parked request somehow reaches a
+    terminal state while still listed in ``handoff_ready`` (bypassing
+    ``Engine.cancel``'s own removal), the sharded drain discards it —
+    even when the prefill shard is otherwise idle, which the old
+    ``step()`` skipped entirely."""
+    se = _sharded(bnn_cfg, bnn_params, 2, roles="prefill,decode")
+    rid = se.submit(_prompts(bnn_cfg, [8], seed=53)[0], 8)
+    with se._on_shard(0) as p:
+        for _ in range(30):
+            if rid in p.handoff_ready:
+                break
+            p.step()
+    assert rid in p.handoff_ready
+    req = p.requests[rid]
+    p.cache.release(req)
+    p.scheduler.running.remove(req)
+    req.state = State.CANCELLED              # terminal, still parked
+    assert p.scheduler.idle                  # shard has nothing else
+    se.step()                                # drain runs despite idleness
+    assert rid not in p.handoff_ready
+    assert rid not in se.engines[1].requests
+    assert se.handoffs == 0
